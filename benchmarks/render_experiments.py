@@ -1,0 +1,300 @@
+"""Render EXPERIMENTS.md from results/dryrun/*.json + the paper-figure
+benchmarks.  Rerun after any dry-run/perf change:
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = "/root/repo/results/dryrun"
+OUT = "/root/repo/EXPERIMENTS.md"
+
+HEADER = """# EXPERIMENTS — vNPU (ISCA'25) reproduction + multi-pod framework
+
+Three parts: (1) reproduction of the paper's own tables/figures on the
+analytical simulator; (2) the multi-pod dry-run over all assigned
+(architecture x shape x mesh) cells; (3) the roofline analysis and the
+performance-iteration log (paper-faithful baseline vs beyond-paper
+recipes, recorded separately).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  Production mesh 16x16 = 256 chips/pod ("data","model");
+multi-pod 2x16x16 = 512 chips ("pod","data","model").
+
+## §Repro — paper-claim scoreboard
+
+Every paper figure/table is reproduced by `benchmarks/paper_figures.py`
+(driven by the DCRA-style simulator in `repro/core/simulator.py`; the
+translation experiments drive the *real* vChunk/page TLB structures).
+`PYTHONPATH=src python -m benchmarks.run` regenerates this.
+
+| paper artifact | paper claim | ours | verdict |
+|---|---|---|---|
+| Fig 11 RT config | few hundred cycles | 640 cycles @128 cores | ok |
+| Fig 12 dispatch | 2-3 orders below kernel exec | >100x below | ok |
+| Table 3 NoC virt overhead | 1-2% | <=1.04% max | ok |
+| Fig 13 broadcast vRouter vs memsync | 4.24x avg | ~5.0x avg (1:1-1:4, multi-tenant HBM) | ok |
+| Fig 14 page-TLB(4) overhead | ~20% | 16.9% avg | ok |
+| Fig 14 page-TLB(32) overhead | >=9.2% | 8.6% avg | ok (trend) |
+| Fig 14 vChunk range(4) overhead | <=4.3% | ~0.01% | ok (stronger: buddy blocks -> few ranges) |
+| Fig 15 transformer vNPU vs UVM | 2.29x | 1.84x | direction ok |
+| Fig 15 resnet vNPU vs UVM | 1.054x | 1.11x | ok |
+| Fig 15 UVM multi-instance degradation | ~24% | 22.9% | ok |
+| Fig 16 GPT vs MIG (TDM) | up to 1.92x | 2.00x | ok |
+| Fig 16 resnet vs MIG | 1.28x avg | 1.14x | direction ok |
+| Fig 16 virtualization overhead | <1% e2e | <1% (0.5% modeled) | ok |
+| Fig 18 similar vs zigzag mapping | up to ~1.4x, grows w/ cores | up to 1.70x @11c; saturates @28c in our analytic pipeline (divergence noted) | partial |
+| Fig 19 HW cost | ~2% LUT/FF | <=2.6% | ok |
+
+Simulator-vs-paper deltas are analyzed in DESIGN.md (we replace FireSim/
+DCRA with a calibrated analytical model; trends and orders of magnitude are
+the reproduction target).
+
+## §Dry-run — multi-pod lower+compile matrix
+
+`launch/dryrun.py` (forces 512 host devices in its first two lines) lowers
+and compiles the right step function for every (arch x shape) on BOTH the
+16x16 single-pod mesh and the 2x16x16 multi-pod mesh:
+
+* train_4k -> `train_step` (loss + grads + AdamW, sharded optimizer state)
+* prefill_32k -> `prefill` ; decode_32k / long_500k -> `decode_step`
+  (one token against a seq_len-deep split-KV cache)
+
+**Result: all 80 cells pass** (10 archs x 4 shapes x 2 meshes; 8 cells/mesh
+are the documented long_500k full-attention skips — rows retained below).
+`memory_analysis()` and `cost_analysis()` per cell live in
+`results/dryrun/*.json`; collective bytes are parsed from the compiled
+SPMD module with while-trip and call-graph multipliers
+(`roofline/analysis.py`).
+
+Accounting notes (full derivation in DESIGN.md):
+* FLOPs/bytes: analytic implementation-faithful model
+  (`roofline/analytic.py`), validated within ~1% of fully-unrolled XLA
+  cost_analysis on dense cells (XLA counts while bodies once, and
+  unrolling 48x128-step scans is infeasible on this 1-core container).
+* The jnp chunked-attention path evaluates masked causal blocks (2x the
+  ideal attention FLOPs) — visible in `useful_flops_ratio`; the Pallas
+  flash kernel (kernels/flash_attention.py) skips them on TPU.
+"""
+
+PERF = """
+## §Perf — hypothesis -> change -> measure log
+
+Paper-faithful baseline recipe (recorded for every cell above): FSDP
+(ZeRO-3) over `data` + TP over `model` (fused-head/ff/vocab dims) + EP for
+MoE + sequence-sharded attention (legal for any head count) + split-KV
+decode.  Three cells hillclimbed per the assignment (worst roofline
+fraction; most collective-bound; most representative of the paper's
+technique — the EP all-to-all "critical edge").
+
+### Cell 1: llama4-maverick-400b decode_32k (worst MFU, most collective-bound)
+
+| iteration | hypothesis (napkin) | change | t_coll | t_mem | step time | verdict |
+|---|---|---|---|---|---|---|
+| baseline | — | FSDP+TP | {l4_base_coll:.0f} ms | {l4_base_mem:.1f} ms | {l4_base_step:.0f} ms | collective-bound 257:1 |
+| 1 | 99 GB of all-gathers = FSDP weight gathers for ONE token; expert weights 2D-shard (E->model, ff->data) + psum activations instead of gathering weights; non-expert params TP-only (12B/16 = 1.5 GB/chip fits) | `--recipe tp` (+int8 moments) | {l4_tp_coll:.1f} ms | {l4_tp_mem:.1f} ms | {l4_tp_step:.1f} ms | **CONFIRMED — {l4_speedup:.0f}x step-time reduction**; also drops temp memory {l4_base_tmp:.1f} -> {l4_tp_tmp:.1f} GB (now fits 16 GB HBM) |
+
+Post-change bottleneck: memory ({l4_tp_mem:.1f} ms = streaming 17B active
+params + caches), which is the physical floor for batch-128 top-1-MoE
+decode; next lever is batch growth or weight quantization, both out of
+scope for the fixed shapes.
+
+### Cell 2: whisper-large-v3 train_4k (most collective-bound train cell)
+
+| iteration | hypothesis (napkin) | change | t_coll | verdict |
+|---|---|---|---|---|
+| baseline | — | FSDP+TP+seq-attn | {wh_base_coll:.0f} ms | collective-bound 31:1 |
+| 1 | gathers are FSDP params -> drop FSDP | `--recipe tp` | {wh_tp_coll:.0f} ms | **REFUTED** — all-gathers stayed ({wh_tp_ag:.0f} GB): they are the seq-sharded attention K/V gathers (64 layers x small d_model), not FSDP; grad all-reduce over data got added on top |
+| 2 | whisper's attention is cheap (d=1280, hd=64) but K/V gathers cost 3 passes x 0.67 GB x 64 layers; replicating the attention core over `model` removes the gathers for ~16x more attention FLOPs (attention is ~13% of step compute -> +{wh_extra_comp:.1f} s compute worst-case vs -{wh_saved:.1f} s collectives) | `--attn-shard replicated` (keep FSDP) | {wh_repl_coll:.0f} ms | **CONFIRMED — step time {wh_base_step:.1f} -> {wh_repl_step:.1f} s (2.3x)**; still collective-bound (TP activation psums at d_model=1280 x 64 layers); mfu {wh_base_mfu:.3f} -> {wh_repl_mfu:.3f} |
+
+Remaining lever (noted, not executed): head-shard over a 4-way model
+sub-axis (20 heads % 16 != 0 but % 4 == 0) — requires a (16,4,4) mesh
+variant, i.e. a different production mesh than the assigned one.
+
+### Cell 3: deepseek-moe-16b train_4k (paper-representative: EP all-to-all)
+
+| iteration | hypothesis (napkin) | change | t_coll | verdict |
+|---|---|---|---|---|
+| baseline | — | FSDP+TP+EP+seq-attn | {ds_base_coll:.0f} ms | collective-bound |
+| 1 | drop FSDP gathers (as cell 1) | `--recipe tp` | {ds_tp_coll:.0f} ms | **REFUTED** — gathers unchanged (they're attention K/V + optimizer-update gathers, not FSDP); fp32 grad all-reduces over data added 21 GB |
+| 2 | deepseek is the ONE arch whose heads divide the mesh (H=KV=16): head-sharded attention deletes the K/V gathers entirely | `--attn-shard heads` (keep FSDP) | {ds_heads_coll:.0f} ms | **REFUTED net** — all-gathers fell 77->59 GB as predicted, but XLA then kept the residual stream replicated over `model` and inserted f32 grad psums (78 GB all-reduce): with seq-sharded attention the partitioner had propagated model-sharding through the whole layer for free |
+| 3 | (analysis) the baseline's seq-sharded attention is load-bearing for layout propagation; the remaining 77 GB all-gather = K/V(bf16, 3 passes) + embed/optimizer gathers; the honest lever is gathering K/V once per layer (remat policy saving gathered K/V), trading +0.5 GB/layer memory | — (napkin only; memory headroom is 6.8 GB, policy change left as future work) | — | baseline stands for this cell |
+
+**Net §Perf outcome**: the paper-faithful baseline is already
+well-laid-out for MoE training; the beyond-paper wins are decode
+({l4_speedup:.0f}x on llama4) and communication-dominated small-d_model
+training (2.3x on whisper).  Both optimized recipes are selectable per
+tenant (`--recipe`, `--attn-shard`) without model changes — in the vNPU
+framing, they are per-tenant virtual-topology policies.
+
+Refuted-hypothesis lessons are kept deliberately: (a) at 256-chip scale
+with modest per-device batch, *sequence-sharded attention gathers — not
+FSDP — dominate train-step collectives for small/medium models*; (b)
+GSPMD's layout propagation interacts with manual shard_map boundaries, so
+a locally-better sharding can be globally worse.
+
+### Pallas-kernel deltas (TPU target; structural, from the lowered math)
+
+* flash_attention: skips fully-masked causal blocks -> halves attention
+  FLOPs vs the XLA chunked path (useful_flops_ratio for prefill cells
+  rises accordingly); scores never round-trip HBM.
+* streamed_matmul: K-major grid = vChunk Pattern-2 monotonic weight
+  stream; fp32 VMEM accumulator; double-buffered HBM->VMEM via the Pallas
+  pipeline.
+* ssd_scan: per-(batch,head) SSM state persists in VMEM scratch across the
+  chunk grid — the paper's scratchpad-resident dataflow on TPU.
+* decode_attention: split-KV streaming with fused masking — the per-shard
+  kernel the decode sharding scheme assumes.
+"""
+
+
+def _load_cells(tag: str = "") -> Dict:
+    cells = {}
+    for fn in os.listdir(RESULTS):
+        if not fn.endswith(".json"):
+            continue
+        base = fn[:-5]
+        parts = base.split("--")
+        if len(parts) != 3:
+            continue
+        arch, shape, mesh_tag = parts
+        if tag:
+            if not mesh_tag.endswith("-" + tag):
+                continue
+            mesh = mesh_tag[: -len(tag) - 1]
+        else:
+            if mesh_tag not in ("16x16", "2x16x16"):
+                continue
+            mesh = mesh_tag
+        cells[(arch, shape, mesh)] = json.load(
+            open(os.path.join(RESULTS, fn)))
+    return cells
+
+
+def render() -> str:
+    from repro.configs import ARCH_IDS, SHAPE_ORDER
+
+    cells = _load_cells()
+    lines = [HEADER]
+
+    # --- dry-run table (memory + compile proof) ---
+    lines.append("\n### Dry-run matrix (16x16 | 2x16x16): status, per-device"
+                 " temp memory\n")
+    lines.append("| arch | shape | 16x16 | temp GB | 2x16x16 | temp GB |")
+    lines.append("|---|---|---|---|---|---|")
+    for a in ARCH_IDS:
+        for s in SHAPE_ORDER:
+            row = [a, s]
+            for mesh in ("16x16", "2x16x16"):
+                c = cells.get((a, s, mesh))
+                if c is None:
+                    row += ["—", ""]
+                elif c.get("status") == "skip":
+                    row += ["SKIP(full-attn)", ""]
+                else:
+                    gb = c["memory"]["temp_size_in_bytes"] / 2**30
+                    row += ["ok", f"{gb:.1f}"]
+            lines.append("| " + " | ".join(str(x) for x in row) + " |")
+    lines.append("\n(temp = XLA buffer-assignment temp bytes per device; "
+                 "argument/output sizes in the JSONs.  Cells >16 GB note "
+                 "where the FSDP baseline exceeds v5e HBM — the tp recipe "
+                 "fixes llama4 decode, see §Perf.)\n")
+
+    # --- roofline table ---
+    lines.append("\n## §Roofline — single-pod (16x16, 256 chips) baseline\n")
+    lines.append("Terms in ms: compute = HLO_FLOPs/(chips*197e12); memory = "
+                 "HLO_bytes/(chips*819e9); collective = per-chip collective "
+                 "bytes/50e9.  `useful` = MODEL_FLOPS/HLO_FLOPs "
+                 "(6*N_active*D convention); `mfu` = MODEL_FLOPS/"
+                 "(chips*peak*max-term).\n")
+    lines.append("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+                 "useful | mfu | one-line fix |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    fixes = {
+        "compute": "bigger per-chip batch or flash kernel (halves attn FLOPs)",
+        "memory": "weight/KV quantization; fuse fp32 intermediates",
+        "collective": "see §Perf: recipe change (tp / attn-shard) per cell",
+    }
+    for a in ARCH_IDS:
+        for s in SHAPE_ORDER:
+            c = cells.get((a, s, "16x16"))
+            if c is None:
+                continue
+            if c.get("status") == "skip":
+                lines.append(f"| {a} | {s} | — | — | — | SKIP | — | — | "
+                             f"{c['reason']} |")
+                continue
+            r = c["roofline"]
+            lines.append(
+                f"| {a} | {s} | {r['t_compute']*1e3:.1f} | "
+                f"{r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
+                f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+                f"{r['mfu']:.4f} | {fixes[r['bottleneck']]} |")
+    lines.append("""
+Reading the table: train/prefill cells are collective-bound at this scale
+because per-chip batch is small (a 256-chip pod on 1M tokens/step) — the
+dominant streams are sequence-sharded attention K/V gathers and FSDP param
+gathers; decode cells are collective/memory-bound by construction (one
+token).  The MODEL_FLOPS/HLO ratio < 1 on attention-heavy cells reflects
+(a) remat (4x fwd-equivalents per train step, by design) and (b) the
+causal-block waste of the jnp attention path that the Pallas kernel
+removes on TPU.  SSM/hybrid cells show useful≈0.93-0.97 at prefill — the
+SSD path does almost no wasted math.""")
+
+    # --- perf section with numbers ---
+    def g(arch, shape, tag):
+        c = _load_cells(tag).get((arch, shape, "16x16"))
+        return c["roofline"] if c else None
+
+    def step_ms(r):
+        return max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e3
+
+    l4b = cells[("llama4_maverick_400b_a17b", "decode_32k", "16x16")]
+    l4t = _load_cells("tp")[("llama4_maverick_400b_a17b", "decode_32k",
+                             "16x16")]
+    whb = cells[("whisper_large_v3", "train_4k", "16x16")]
+    whr = _load_cells("fsdp-repl")[("whisper_large_v3", "train_4k", "16x16")]
+    wht = _load_cells("tp")[("whisper_large_v3", "train_4k", "16x16")]
+    dsb = cells[("deepseek_moe_16b", "train_4k", "16x16")]
+    dst = _load_cells("tp")[("deepseek_moe_16b", "train_4k", "16x16")]
+    dsh = _load_cells("fsdp-heads")[("deepseek_moe_16b", "train_4k",
+                                     "16x16")]
+    kw = dict(
+        l4_base_coll=l4b["roofline"]["t_collective"] * 1e3,
+        l4_base_mem=l4b["roofline"]["t_memory"] * 1e3,
+        l4_base_step=step_ms(l4b["roofline"]),
+        l4_base_tmp=l4b["memory"]["temp_size_in_bytes"] / 2**30,
+        l4_tp_coll=l4t["roofline"]["t_collective"] * 1e3,
+        l4_tp_mem=l4t["roofline"]["t_memory"] * 1e3,
+        l4_tp_step=step_ms(l4t["roofline"]),
+        l4_tp_tmp=l4t["memory"]["temp_size_in_bytes"] / 2**30,
+        l4_speedup=step_ms(l4b["roofline"]) / step_ms(l4t["roofline"]),
+        wh_base_coll=whb["roofline"]["t_collective"] * 1e3,
+        wh_base_step=step_ms(whb["roofline"]) / 1e3,
+        wh_base_mfu=whb["roofline"]["mfu"],
+        wh_tp_coll=wht["roofline"]["t_collective"] * 1e3,
+        wh_tp_ag=wht["roofline"]["coll_breakdown"]["all-gather"] / 1e9,
+        wh_repl_coll=whr["roofline"]["t_collective"] * 1e3,
+        wh_repl_step=step_ms(whr["roofline"]) / 1e3,
+        wh_repl_mfu=whr["roofline"]["mfu"],
+        wh_extra_comp=1.1, wh_saved=4.6,
+        ds_base_coll=dsb["roofline"]["t_collective"] * 1e3,
+        ds_tp_coll=dst["roofline"]["t_collective"] * 1e3,
+        ds_heads_coll=dsh["roofline"]["t_collective"] * 1e3,
+    )
+    lines.append(PERF.format(**kw))
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    md = render()
+    with open(OUT, "w") as f:
+        f.write(md)
+    print(f"wrote {OUT} ({len(md)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

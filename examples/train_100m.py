@@ -1,0 +1,70 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model for a
+few hundred steps on the synthetic-but-learnable pipeline, with periodic
+checkpointing and straggler detection — deliverable (b)'s training example.
+
+CPU note: a true 100M/300-step run takes hours on this container; the
+default invocation trains a ~14M model for 60 steps (same code path, every
+subsystem exercised).  Pass --full for the real thing on real hardware.
+
+Run: PYTHONPATH=src python examples/train_100m.py [--full]
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, make_batch
+from repro.models import build
+from repro.train import AdamWConfig, TrainConfig, train_loop
+
+
+def small_llama(full: bool) -> ModelConfig:
+    if full:
+        # ~100M params
+        return ModelConfig(name="llama_100m", family="dense", n_layers=12,
+                           d_model=768, n_heads=12, n_kv_heads=4,
+                           d_ff=2048, vocab_size=32000, head_dim=64)
+    return ModelConfig(name="llama_14m", family="dense", n_layers=4,
+                       d_model=256, n_heads=4, n_kv_heads=2,
+                       d_ff=688, vocab_size=8192, head_dim=64)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+    cfg = small_llama(args.full)
+    steps = args.steps or (300 if args.full else 60)
+
+    bundle = build(cfg)
+    n = cfg.param_count()
+    print(f"training {cfg.name}: {n/1e6:.1f}M params, {steps} steps")
+    tcfg = TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=20))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=256 if args.full
+                      else 128, global_batch=8)
+
+    def it():
+        s = 0
+        while True:
+            yield {k: jnp.asarray(v) for k, v in make_batch(dcfg, s).items()}
+            s += 1
+
+    ckpt = tempfile.mkdtemp(prefix="train100m-")
+    stragglers = []
+    state, hist = train_loop(
+        bundle, tcfg, it(), n_steps=steps, key=jax.random.PRNGKey(0),
+        checkpoint_dir=ckpt, checkpoint_every=max(steps // 3, 10),
+        on_straggler=stragglers.append, log_every=max(steps // 10, 1))
+    print("loss curve:", [round(h["loss"], 3) for h in hist])
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss must decrease"
+    print(f"checkpoints in {ckpt}; stragglers flagged: {stragglers}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

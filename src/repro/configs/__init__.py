@@ -1,0 +1,2 @@
+from .base import ModelConfig, ARCH_IDS, ALIASES, get_config, registry
+from .shapes import SHAPES, SHAPE_ORDER, ShapeSpec, applicable, all_cells, is_subquadratic

@@ -1,0 +1,50 @@
+"""vNPU core: topology-aware virtualization for inter-core connected NPUs.
+
+The paper's three techniques, plus the JAX-mesh integration:
+
+* :mod:`repro.core.vrouter` / :mod:`repro.core.routing_table` — NPU route
+  virtualization (instruction dispatch + NoC).
+* :mod:`repro.core.vchunk` — range-based memory virtualization.
+* :mod:`repro.core.mapping` — best-effort topology mapping (Algorithm 1).
+* :mod:`repro.core.hypervisor` — vNPU lifecycle + MIG/UVM baselines.
+* :mod:`repro.core.simulator` / :mod:`repro.core.workloads` — the DCRA-style
+  performance model behind the paper-figure benchmarks.
+* :mod:`repro.core.vmesh` — virtual NPUs as `jax.sharding.Mesh` submeshes.
+"""
+from .topology import Topology, mesh_2d, line, ring, enumerate_connected_subsets
+from .routing_table import (DenseRoutingTable, CompactRoutingTable,
+                            RoutingTableDirectory, make_routing_table,
+                            RoutingError)
+from .vrouter import (InstructionRouter, NoCRouter, dor_path, confined_path,
+                      rt_config_cost)
+from .vchunk import (RangeTranslationTable, RTTEntry, RangeTLB, PageTable,
+                     PageTLB, AccessCounter, TranslationFault)
+from .buddy import BuddyAllocator, OutOfMemory
+from .mapping import (topology_edit_distance, min_topology_edit_distance,
+                      straightforward_mapping, MappingResult,
+                      default_node_match, default_edge_match,
+                      mem_dist_node_match, critical_edge_match)
+from .hypervisor import (Hypervisor, VNPURequest, VirtualNPU, AllocationError,
+                         MIGPartitioner, UVMAllocator,
+                         make_standard_hypervisor)
+from .vmesh import (DeviceTopology, TenantMesh, virtual_mesh, allocate_tenant,
+                    elastic_remap, device_permutation)
+
+__all__ = [
+    "Topology", "mesh_2d", "line", "ring", "enumerate_connected_subsets",
+    "DenseRoutingTable", "CompactRoutingTable", "RoutingTableDirectory",
+    "make_routing_table", "RoutingError",
+    "InstructionRouter", "NoCRouter", "dor_path", "confined_path",
+    "rt_config_cost",
+    "RangeTranslationTable", "RTTEntry", "RangeTLB", "PageTable", "PageTLB",
+    "AccessCounter", "TranslationFault",
+    "BuddyAllocator", "OutOfMemory",
+    "topology_edit_distance", "min_topology_edit_distance",
+    "straightforward_mapping", "MappingResult",
+    "default_node_match", "default_edge_match", "mem_dist_node_match",
+    "critical_edge_match",
+    "Hypervisor", "VNPURequest", "VirtualNPU", "AllocationError",
+    "MIGPartitioner", "UVMAllocator", "make_standard_hypervisor",
+    "DeviceTopology", "TenantMesh", "virtual_mesh", "allocate_tenant",
+    "elastic_remap", "device_permutation",
+]

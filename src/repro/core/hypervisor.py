@@ -1,0 +1,330 @@
+"""The vNPU hypervisor (§5.2): virtual-NPU lifecycle and meta-table owner.
+
+Manages, per virtual NPU:
+  * core allocation via topology mapping (exact -> similar -> optional
+    fragmented fallback),
+  * the routing table (compact encoding when the allocation is a contiguous
+    rectangle, dense otherwise) + confined-routing directions,
+  * global-memory allocation through the buddy system, recorded as RTT
+    ranges sorted by virtual address,
+  * the per-tenant Access Counter bandwidth cap.
+
+Also provides the two comparison allocators used throughout §6:
+``MIGPartitioner`` (fixed sub-topologies, TDM when oversubscribed — the
+MIG-NPU baseline) and ``UVMAllocator`` (no topology: arbitrary cores, data
+exchanged through global memory — the Aurora/V10-style baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .buddy import BuddyAllocator, OutOfMemory
+from .mapping import (MappingResult, min_topology_edit_distance,
+                      straightforward_mapping, NodeMatch, EdgeMatch)
+from .routing_table import (DenseRoutingTable, RoutingTable,
+                            RoutingTableDirectory, make_routing_table)
+from .topology import Topology, mesh_2d
+from .vchunk import AccessCounter, RangeTranslationTable, RTTEntry
+from .vrouter import NoCRouter, confined_path, path_directions
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class VNPURequest:
+    """What a VM asks for at creation (§5.2): cores+topology, memory, QoS."""
+    topology: Topology
+    memory_bytes: int = 0
+    bandwidth_cap: Optional[int] = None   # bytes per window, None = unlimited
+    require_connected: bool = True
+    confined_routing: bool = False
+    strategy: str = "similar"             # similar | straightforward
+
+
+@dataclasses.dataclass
+class VirtualNPU:
+    vmid: int
+    request: VNPURequest
+    p_cores: FrozenSet[int]
+    assignment: Dict[int, int]            # virtual core id -> physical core id
+    routing_table: RoutingTable
+    rtt: RangeTranslationTable
+    access_counter: AccessCounter
+    ted: float
+    exact: bool
+    mem_blocks: List[int] = dataclasses.field(default_factory=list)
+    time_share: float = 1.0               # <1.0 when TDM-shared (MIG baseline)
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.p_cores)
+
+    def virtual_topology(self) -> Topology:
+        return self.request.topology
+
+
+class Hypervisor:
+    """CPU-side hypervisor + hyper-mode NPU controller state (§5)."""
+
+    def __init__(self, phys_topo: Topology, hbm_bytes: int = 1 << 36,
+                 min_block: int = 1 << 20):
+        self.topo = phys_topo
+        self.directory = RoutingTableDirectory()
+        self.noc = NoCRouter(phys_topo)
+        self.buddy = BuddyAllocator(hbm_bytes, min_block=min_block)
+        self.vnpus: Dict[int, VirtualNPU] = {}
+        self._next_vmid = 1
+
+    # -- introspection -----------------------------------------------------
+    def allocated_cores(self) -> Set[int]:
+        return {p for v in self.vnpus.values() for p in v.p_cores}
+
+    def free_cores(self) -> Set[int]:
+        return set(self.topo.node_attrs) - self.allocated_cores()
+
+    def utilization(self) -> float:
+        total = self.topo.num_nodes
+        return len(self.allocated_cores()) / total if total else 0.0
+
+    # -- lifecycle ----------------------------------------------------------
+    def create_vnpu(self, request: VNPURequest,
+                    node_match: Optional[NodeMatch] = None,
+                    edge_match: Optional[EdgeMatch] = None) -> VirtualNPU:
+        k = request.topology.num_nodes
+        free = self.free_cores()
+        if k > len(free):
+            raise AllocationError(
+                f"requested {k} cores, only {len(free)} free")
+
+        if request.strategy == "straightforward":
+            result = straightforward_mapping(self.topo, self.allocated_cores(),
+                                             request.topology)
+        else:
+            result = min_topology_edit_distance(
+                self.topo, self.allocated_cores(), request.topology,
+                node_match=node_match, edge_match=edge_match,
+                require_connected=request.require_connected)
+            if result is None and not request.require_connected:
+                result = straightforward_mapping(
+                    self.topo, self.allocated_cores(), request.topology)
+        if result is None:
+            raise AllocationError(
+                f"no candidate sub-topology of {k} cores "
+                f"(topology lock-in; free={len(free)})")
+
+        vmid = self._next_vmid
+        self._next_vmid += 1
+
+        # routing table: virtual ids are the request topology's node ids
+        v_to_p = dict(result.assignment)
+        rt = make_routing_table(
+            vmid, v_to_p,
+            phys_cols=self._phys_cols(),
+            phys_coords=self.topo.coords or None)
+
+        # confined routing: pre-program per-hop directions for every pair
+        if request.confined_routing and isinstance(rt, DenseRoutingTable):
+            self._program_confined_routes(rt, result.nodes)
+
+        # memory: buddy blocks -> RTT ranges sorted by vaddr (§5.2)
+        rtt = RangeTranslationTable()
+        blocks: List[int] = []
+        if request.memory_bytes > 0:
+            vaddr = 0
+            remaining = request.memory_bytes
+            while remaining > 0:
+                chunk = min(remaining, self.buddy.total // 4)
+                try:
+                    paddr, size = self.buddy.alloc(chunk)
+                except OutOfMemory:
+                    for b in blocks:
+                        self.buddy.free_block(b)
+                    raise AllocationError("insufficient NPU global memory")
+                blocks.append(paddr)
+                rtt.insert(RTTEntry(vaddr=vaddr, paddr=paddr, size=size))
+                vaddr += size
+                remaining -= size
+
+        vnpu = VirtualNPU(
+            vmid=vmid, request=request, p_cores=result.nodes,
+            assignment=v_to_p, routing_table=rt, rtt=rtt,
+            access_counter=AccessCounter(request.bandwidth_cap),
+            ted=result.ted, exact=result.exact, mem_blocks=blocks)
+        self.vnpus[vmid] = vnpu
+        self.directory.install(rt)
+        return vnpu
+
+    def destroy_vnpu(self, vmid: int) -> None:
+        vnpu = self.vnpus.pop(vmid, None)
+        if vnpu is None:
+            raise AllocationError(f"unknown vmid {vmid}")
+        self.directory.remove(vmid)
+        for b in vnpu.mem_blocks:
+            self.buddy.free_block(b)
+
+    def _phys_cols(self) -> Optional[int]:
+        shape = self.topo.is_rect_mesh()
+        return shape[1] if shape else None
+
+    def _program_confined_routes(self, rt: DenseRoutingTable,
+                                 owned: FrozenSet[int]) -> None:
+        v_cores = rt.v_cores()
+        for v_src, v_dst in itertools.permutations(v_cores, 2):
+            p_src, p_dst = rt.lookup(v_src), rt.lookup(v_dst)
+            path = confined_path(self.topo, p_src, p_dst, owned)
+            if path is None:
+                raise AllocationError(
+                    "confined routing requested but allocation disconnects "
+                    f"{p_src}->{p_dst}")
+            if self.topo.coords:
+                coords = [self.topo.coords[n] for n in path]
+                rt.set_route(v_src, v_dst, path_directions(coords))
+
+    # -- elastic remap (fault tolerance; used by vmesh/elastic) -------------
+    def remap_vnpu(self, vmid: int, failed_cores: Iterable[int],
+                   node_match: Optional[NodeMatch] = None) -> VirtualNPU:
+        """Device failure path: re-run similar-topology mapping over the
+        surviving free cores and re-install the routing table.  Memory (RTT)
+        is preserved — HBM contents are re-loaded from checkpoint by the
+        training runtime.
+        """
+        vnpu = self.vnpus[vmid]
+        failed = set(failed_cores)
+        others = {p for v in self.vnpus.values() if v.vmid != vmid
+                  for p in v.p_cores}
+        blocked = others | failed
+        result = min_topology_edit_distance(
+            self.topo, blocked, vnpu.request.topology,
+            node_match=node_match,
+            require_connected=vnpu.request.require_connected)
+        if result is None:
+            raise AllocationError(
+                f"cannot remap vmid={vmid}: no surviving sub-topology")
+        rt = make_routing_table(vmid, dict(result.assignment),
+                                phys_cols=self._phys_cols(),
+                                phys_coords=self.topo.coords or None)
+        vnpu.p_cores = result.nodes
+        vnpu.assignment = dict(result.assignment)
+        vnpu.routing_table = rt
+        vnpu.ted = result.ted
+        vnpu.exact = result.exact
+        self.directory.install(rt)
+        return vnpu
+
+
+# ---------------------------------------------------------------------------
+# MIG baseline (§6.3.2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MIGPartition:
+    pid: int
+    cores: FrozenSet[int]
+    topology: Topology
+    occupied_by: Optional[int] = None
+
+
+class MIGPartitioner:
+    """Fixed-partition virtualization à la NVIDIA MIG / TPU-v6e slices.
+
+    The physical mesh is split into a predetermined set of rectangular
+    sub-topologies.  Requests get the smallest free partition with at least
+    the requested core count; if none is large enough, multiple virtual cores
+    time-share one physical core (TDM), modeled by ``time_share`` < 1.
+    """
+
+    def __init__(self, phys_topo: Topology, partition_shapes: Sequence[Tuple[int, int]]):
+        self.topo = phys_topo
+        shape = phys_topo.is_rect_mesh()
+        if shape is None:
+            raise ValueError("MIG baseline requires a rectangular mesh")
+        self.mesh_shape = shape
+        self.partitions: List[MIGPartition] = []
+        self._carve(partition_shapes)
+        self._next_vmid = 1
+
+    def _carve(self, shapes: Sequence[Tuple[int, int]]) -> None:
+        """Tile the mesh left-to-right, top-to-bottom with the given shapes."""
+        R, C = self.mesh_shape
+        by_coord = {v: k for k, v in self.topo.coords.items()}
+        used: Set[Tuple[int, int]] = set()
+        pid = 0
+        for (r, c) in shapes:
+            placed = False
+            for r0 in range(R - r + 1):
+                for c0 in range(C - c + 1):
+                    cells = {(r0 + i, c0 + j) for i in range(r) for j in range(c)}
+                    if cells & used:
+                        continue
+                    used |= cells
+                    cores = frozenset(by_coord[x] for x in cells)
+                    self.partitions.append(
+                        MIGPartition(pid, cores, self.topo.subgraph(cores)))
+                    pid += 1
+                    placed = True
+                    break
+                if placed:
+                    break
+            if not placed:
+                raise ValueError(f"cannot carve partition {r}x{c}")
+
+    def allocate(self, n_cores: int) -> Tuple[MIGPartition, float]:
+        """Returns (partition, time_share).  time_share < 1 when the request
+        exceeds every free partition and physical cores must be TDM-shared.
+        """
+        free = [p for p in self.partitions if p.occupied_by is None]
+        if not free:
+            raise AllocationError("no free MIG partition")
+        fitting = [p for p in free if len(p.cores) >= n_cores]
+        if fitting:
+            part = min(fitting, key=lambda p: len(p.cores))
+            share = 1.0
+        else:
+            part = max(free, key=lambda p: len(p.cores))
+            share = len(part.cores) / n_cores  # TDM factor (<1)
+        part.occupied_by = self._next_vmid
+        self._next_vmid += 1
+        return part, share
+
+    def release(self, pid: int) -> None:
+        self.partitions[pid].occupied_by = None
+
+    def utilization_for(self, n_cores: int, part: MIGPartition) -> float:
+        """Fraction of the partition the tenant actually uses."""
+        return min(1.0, n_cores / len(part.cores))
+
+
+# ---------------------------------------------------------------------------
+# UVM baseline (Aurora / V10-style; §6.3.1)
+# ---------------------------------------------------------------------------
+
+class UVMAllocator:
+    """Cores are symmetric and interchangeable; no topology is exposed, all
+    inter-core data exchange goes through global memory.  Allocation is just
+    "any N free cores".
+    """
+
+    def __init__(self, phys_topo: Topology):
+        self.topo = phys_topo
+        self.allocated: Set[int] = set()
+
+    def allocate(self, n_cores: int) -> FrozenSet[int]:
+        free = sorted(set(self.topo.node_attrs) - self.allocated)
+        if len(free) < n_cores:
+            raise AllocationError("not enough free cores")
+        pick = frozenset(free[:n_cores])
+        self.allocated |= pick
+        return pick
+
+    def release(self, cores: Iterable[int]) -> None:
+        self.allocated -= set(cores)
+
+
+def make_standard_hypervisor(rows: int = 6, cols: int = 6,
+                             hbm_bytes: int = 1 << 36) -> Hypervisor:
+    """The SIM configuration of Table 2: 36 tiles, 2D mesh."""
+    return Hypervisor(mesh_2d(rows, cols), hbm_bytes=hbm_bytes)

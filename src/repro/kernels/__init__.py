@@ -1,0 +1,2 @@
+from .ops import matmul, flash_attention, ssd_scan, decode_attention
+from . import ref

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+that tests/test_kernels.py sweeps shapes/dtypes against).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(M,K) @ (K,N) with fp32 accumulation, output in x.dtype."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)
+                   ).astype(x.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True) -> jnp.ndarray:
+    """q,k,v: (B,H,S,hd) -> (B,H,S,hd); plain softmax attention in fp32."""
+    B, H, S, hd = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_kernel_ref(x, dt, A, B, C, chunk: int):
+    """Single-group SSD oracle; x (b,S,H,P), dt (b,S,H), A (H), B/C (b,S,N).
+
+    Thin wrapper over models.ssd.ssd_scan_ref (the model-level reference).
+    """
+    from ..models.ssd import ssd_scan_ref
+    return ssd_scan_ref(x, dt, A, B[:, :, None, :], C[:, :, None, :], chunk)
+
+
+def decode_attention_ref(q, k, v, length: int) -> jnp.ndarray:
+    """q: (B,H,hd); k,v: (B,S,H,hd); attend to positions < length."""
+    B, S, H, hd = k.shape
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(S) < length
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,121 @@
+"""Uniform model API: one bundle per architecture config.
+
+``build(cfg)`` returns a :class:`ModelBundle` whose members are plain
+functions — the launcher, trainer, server, dry-run and tests all consume
+this one interface:
+
+    init(key)                      -> params
+    loss(params, batch)            -> (scalar, metrics)
+    forward(params, batch)         -> logits
+    prefill(params, batch)         -> (last_logits, caches)
+    decode(params, caches, token, pos) -> (logits, caches)
+    init_cache(batch, max_seq)     -> caches
+    param_logical_axes()           -> pytree of logical-axis tuples
+    input_specs(shape, kind)       -> ShapeDtypeStruct batch for .lower()
+
+``input_specs`` is the multi-pod dry-run's entry point: weak-type-correct,
+shardable stand-ins, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import lm, whisper
+from .common import dtype_of
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeSpec
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    param_logical_axes: Callable
+    input_specs: Callable
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """VLM frontends consume part of the sequence budget."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.frontend_seq
+    return seq_len
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg.param_dtype)
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.frontend_dim), dt),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, _text_len(cfg, S)), jnp.int32),
+            "patch_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq, cfg.frontend_dim), dt),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    mod = whisper if cfg.family == "encdec" else lm
+
+    def init(key):
+        p, _ = mod.init_params(cfg, key)
+        return p
+
+    def param_logical_axes():
+        cell = {}
+
+        def f(k):
+            p, ax = mod.init_params(cfg, k)
+            cell["ax"] = ax  # static metadata; params never materialize
+            return p
+
+        jax.eval_shape(f, jax.random.PRNGKey(0))
+        return cell["ax"]
+
+    def loss(params, batch):
+        return mod.loss_fn(cfg, params, batch)
+
+    def forward(params, batch):
+        out = mod.forward(cfg, params, batch)
+        return out[0]
+
+    def prefill(params, batch):
+        return mod.prefill(cfg, params, batch)
+
+    def decode(params, caches, token, pos):
+        return mod.decode_step(cfg, params, caches, token, pos)
+
+    def init_cache(batch, max_seq):
+        return mod.init_cache(cfg, batch, max_seq)
+
+    def input_specs(shape: ShapeSpec, kind: Optional[str] = None):
+        kind = kind or shape.kind
+        if kind in ("train", "prefill"):
+            return _batch_specs(cfg, shape)
+        # decode: one new token against a seq_len-deep cache
+        B = shape.global_batch
+        cache_specs = jax.eval_shape(lambda: init_cache(B, shape.seq_len))
+        return {
+            "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "caches": cache_specs,
+        }
+
+    return ModelBundle(cfg=cfg, init=init, loss=loss, forward=forward,
+                       prefill=prefill, decode=decode, init_cache=init_cache,
+                       param_logical_axes=param_logical_axes,
+                       input_specs=input_specs)

@@ -1,0 +1,219 @@
+"""Unified language model covering all assigned decoder-only families
+(dense / moe / ssm / hybrid / vlm); the whisper encoder-decoder lives in
+``whisper.py`` and reuses the same blocks.
+
+Layer stacks are scanned (`lax.scan` over stacked params) with per-layer
+remat — HLO stays compact for 48-layer models and activation memory is
+bounded by one layer.  MoE interleaving (llama4) scans over (dense, moe)
+*pairs* so the stack stays homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import block_forward, block_init, init_block_cache
+from .common import (Params, apply_norm, dtype_of, embed_init,
+                     get_scan_unroll, norm_init, softmax_cross_entropy,
+                     with_logical_constraint)
+
+
+def layer_plan(cfg) -> List[Tuple[Tuple[str, ...], int]]:
+    """[(kinds-per-scan-step, count), ...] — homogeneous scan stacks."""
+    if cfg.family in ("dense", "vlm"):
+        return [(("dense",), cfg.n_layers)]
+    if cfg.family == "ssm":
+        return [(("ssm",), cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return [(("hybrid",), cfg.n_layers)]
+    if cfg.family == "moe":
+        plan: List[Tuple[Tuple[str, ...], int]] = []
+        if cfg.moe_interleave > 1:
+            pairs = cfg.n_layers // cfg.moe_interleave
+            kinds = tuple(["dense"] * (cfg.moe_interleave - 1) + ["moe"])
+            return [(kinds, pairs)]
+        if cfg.first_k_dense:
+            plan.append((("dense",), cfg.first_k_dense))
+        plan.append((("moe",), cfg.n_layers - cfg.first_k_dense))
+        return plan
+    raise ValueError(f"layer_plan: unhandled family {cfg.family}")
+
+
+def _stack_init(cfg, key, dtype, kinds: Tuple[str, ...], count: int):
+    """vmap the per-layer init over the stack dim."""
+    def one(k):
+        ks = jax.random.split(k, len(kinds))
+        p = {}
+        for i, kind in enumerate(kinds):
+            bp, _ = block_init(cfg, ks[i], dtype, kind)
+            p[f"b{i}"] = bp
+        return p
+    keys = jax.random.split(key, count)
+    params = jax.vmap(one)(keys)
+    # logical axes: same per layer, with a leading "layers" axis
+    _, ax0 = block_init(cfg, jax.random.PRNGKey(0), dtype, kinds[0])
+    ax = {}
+    for i, kind in enumerate(kinds):
+        _, bx = block_init(cfg, jax.random.PRNGKey(0), dtype, kind)
+        ax[f"b{i}"] = jax.tree.map(lambda t: ("layers",) + tuple(t), bx,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return params, ax
+
+
+def init_params(cfg, key) -> Tuple[Params, Dict]:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4 + len(layer_plan(cfg)))
+    p: Params = {"embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                     dtype)}
+    ax: Dict = {"embed": ("vocab", "embed")}
+    stacks = []
+    stack_axes = []
+    for i, (kinds, count) in enumerate(layer_plan(cfg)):
+        sp, sax = _stack_init(cfg, ks[2 + i], dtype, kinds, count)
+        stacks.append(sp)
+        stack_axes.append(sax)
+    p["stacks"] = stacks
+    ax["stacks"] = stack_axes
+    p["final_norm"], ax["final_norm"] = norm_init(cfg, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[1], cfg.padded_vocab, cfg.d_model,
+                                  dtype).T
+        ax["lm_head"] = ("embed", "vocab")
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg, p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(p["embed"], tokens, axis=0)
+    return with_logical_constraint(x, "batch", None, None)
+
+
+def unembed(cfg, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return with_logical_constraint(logits, "batch", None, "vocab_act")
+
+
+def build_inputs(cfg, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Token embeddings, with the modality-frontend stub prepended (vlm)."""
+    x = embed_tokens(cfg, p, batch["tokens"])
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _scan_stack(cfg, stack_params, x, kinds: Tuple[str, ...], *,
+                caches=None, cache_pos=None, collect_cache: bool = False,
+                enc_out=None):
+    """Scan one homogeneous stack.  Returns (x, new_caches_or_None, aux)."""
+    init = (x, jnp.zeros((), jnp.float32))
+
+    def apply_layer(h, aux, sp, layer_cache):
+        new_caches = {}
+        for i, kind in enumerate(kinds):
+            lc = layer_cache[f"b{i}"] if layer_cache is not None else None
+            h, nc, a = block_forward(cfg, sp[f"b{i}"], h, kind,
+                                     cache=lc, cache_pos=cache_pos,
+                                     enc_out=enc_out)
+            aux = aux + a
+            new_caches[f"b{i}"] = nc
+        return h, aux, new_caches
+
+    unroll = get_scan_unroll()
+    if caches is None:
+        def body(carry, sp):
+            h, aux, ncs = apply_layer(carry[0], carry[1], sp, None)
+            return (h, aux), (ncs if collect_cache else None)
+        (x, aux), ys = jax.lax.scan(jax.checkpoint(body), init, stack_params,
+                                    unroll=True if unroll else 1)
+    else:
+        def body(carry, xs):
+            sp, lc = xs
+            h, aux, ncs = apply_layer(carry[0], carry[1], sp, lc)
+            return (h, aux), ncs
+        (x, aux), ys = jax.lax.scan(jax.checkpoint(body), init,
+                                    (stack_params, caches),
+                                    unroll=True if unroll else 1)
+    return x, ys, aux
+
+
+def forward(cfg, p: Params, batch: Dict[str, jnp.ndarray], *,
+            collect_cache: bool = False):
+    """Full-sequence forward.  Returns (logits, caches, aux_loss)."""
+    x = build_inputs(cfg, p, batch)
+    all_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for stack_params, (kinds, _) in zip(p["stacks"], layer_plan(cfg)):
+        x, ys, aux = _scan_stack(cfg, stack_params, x, kinds,
+                                 collect_cache=collect_cache)
+        aux_total = aux_total + aux
+        all_caches.append(ys)
+    x = apply_norm(cfg, x, p["final_norm"])
+    logits = unembed(cfg, p, x)
+    return logits, (all_caches if collect_cache else None), aux_total
+
+
+def loss_fn(cfg, p: Params, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token CE (shift-by-one), masking frontend positions for VLMs."""
+    logits, _, aux = forward(cfg, p, batch)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        n_patch = batch["patch_embeds"].shape[1]
+        logits = logits[:, n_patch:, :]
+    ce = softmax_cross_entropy(logits[:, :-1, :], tokens[:, 1:],
+                               cfg.vocab_size)
+    loss = jnp.mean(ce)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux, "ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int) -> List[Any]:
+    """Decode cache: one stacked pytree per stack (leading dim = #layers)."""
+    dtype = dtype_of(cfg.param_dtype)
+    caches = []
+    for kinds, count in layer_plan(cfg):
+        def one(_):
+            return {f"b{i}": init_block_cache(cfg, kind, batch, max_seq, dtype)
+                    for i, kind in enumerate(kinds)}
+        caches.append(jax.vmap(one)(jnp.arange(count)))
+    return caches
+
+
+def decode_step(cfg, p: Params, caches: List[Any], token: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One token for the whole batch: token (B,1) int32, pos () int32.
+
+    Returns (logits (B,1,V), new_caches).
+    """
+    x = embed_tokens(cfg, p, token)
+    new_caches = []
+    for stack_params, cache, (kinds, _) in zip(p["stacks"], caches,
+                                               layer_plan(cfg)):
+        x, ys, _ = _scan_stack(cfg, stack_params, x, kinds,
+                               caches=cache, cache_pos=pos)
+        new_caches.append(ys)
+    x = apply_norm(cfg, x, p["final_norm"])
+    logits = unembed(cfg, p, x)
+    return logits, new_caches
+
+
+def prefill(cfg, p: Params, batch: Dict[str, jnp.ndarray]):
+    """Process the prompt; returns (last_logits, caches-with-kv)."""
+    logits, caches, _ = forward(cfg, p, batch, collect_cache=True)
+    return logits[:, -1:, :], caches

@@ -1,0 +1,1 @@
+from .engine import ServeEngine, EngineConfig, Request, seed_decode_cache

@@ -1,0 +1,3 @@
+from .optimizer import AdamWConfig, init_opt_state, adamw_update
+from .state import init_state, state_logical_axes
+from .loop import TrainConfig, make_train_step, train_loop, StepTimer

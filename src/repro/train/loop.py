@@ -1,0 +1,135 @@
+"""Training loop: jit-compiled step (grad -> clip -> AdamW), gradient
+accumulation, optional int8 gradient compression with error feedback,
+straggler detection hooks, checkpoint/restart and elastic-remap recovery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update
+from .state import TrainState, init_state
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    grad_accum: int = 1
+    compress_grads: bool = False      # int8 all-reduce w/ error feedback
+    straggler_threshold: float = 3.0  # x median step time triggers the hook
+
+
+def make_train_step(loss_fn: Callable, tcfg: TrainConfig,
+                    compress_fn: Optional[Callable] = None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With grad_accum > 1 the batch's leading dim is split into microbatches
+    and gradients are averaged in a scan (compute/comm overlap: XLA overlaps
+    each microbatch's reduce with the next microbatch's compute).
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        params = state["params"]
+        if tcfg.grad_accum > 1:
+            def micro(i, b):
+                return jax.tree.map(
+                    lambda x: x.reshape(tcfg.grad_accum,
+                                        x.shape[0] // tcfg.grad_accum,
+                                        *x.shape[1:])[i] if x.ndim else x, b)
+
+            def acc_step(carry, i):
+                g_acc, l_acc = carry
+                loss, _, g = grads_of(params, micro(i, batch))
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)),
+                jnp.arange(tcfg.grad_accum))
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+            loss = loss_sum / tcfg.grad_accum
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], tcfg.opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# host-side driver with fault-tolerance hooks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepTimer:
+    """Straggler detection: per-step wall times; flags steps that exceed
+    ``threshold`` x the running median (on a real pod this feeds the
+    hypervisor's remap/elastic-DP decision)."""
+    threshold: float = 3.0
+    times: List[float] = dataclasses.field(default_factory=list)
+    stragglers: List[int] = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        med = sorted(self.times)[len(self.times) // 2]
+        slow = len(self.times) >= 5 and dt > self.threshold * med
+        if slow:
+            self.stragglers.append(step)
+        return slow
+
+
+def train_loop(bundle, tcfg: TrainConfig, data_iter: Iterable, *,
+               n_steps: int, state: Optional[TrainState] = None,
+               key=None, checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0,
+               on_straggler: Optional[Callable[[int], None]] = None,
+               log_every: int = 10) -> Tuple[TrainState, List[Dict]]:
+    """Single-process training driver used by examples/train_100m.py and the
+    integration tests.  Checkpointing via repro.checkpoint (restart-safe)."""
+    from ..checkpoint.ckpt import save_checkpoint
+
+    if state is None:
+        params = bundle.init(key if key is not None else
+                             jax.random.PRNGKey(0))
+        state = init_state(params, tcfg.opt)
+    step_fn = jax.jit(make_train_step(bundle.loss, tcfg))
+    timer = StepTimer(tcfg.straggler_threshold)
+    history: List[Dict] = []
+    start = int(state["step"])
+    for i, batch in enumerate(data_iter):
+        if i >= n_steps:
+            break
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if timer.record(start + i, dt) and on_straggler:
+            on_straggler(start + i)
+        if (i % log_every) == 0 or i == n_steps - 1:
+            history.append({k: float(v) for k, v in metrics.items()
+                            if jnp.ndim(v) == 0})
+        if checkpoint_dir and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_dir, state, step=start + i + 1)
+    return state, history

@@ -1,0 +1,24 @@
+"""Training state: a plain dict pytree (params + optimizer state + step) so
+sharding trees, checkpoints and eval_shape all stay trivial."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, init_opt_state, opt_logical_axes
+
+TrainState = Dict[str, Any]  # {"params", "opt", "step"}
+
+
+def init_state(params, opt_cfg: AdamWConfig) -> TrainState:
+    return {"params": params,
+            "opt": init_opt_state(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_logical_axes(param_axes, opt_cfg: AdamWConfig):
+    return {"params": param_axes,
+            "opt": opt_logical_axes(param_axes, opt_cfg),
+            "step": ()}

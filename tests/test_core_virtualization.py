@@ -1,0 +1,369 @@
+"""Core vNPU layer: topology, routing tables, vRouter, vChunk, buddy,
+mapping, hypervisor — unit + property tests (hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AccessCounter, AllocationError, BuddyAllocator,
+                        CompactRoutingTable, DenseRoutingTable, Hypervisor,
+                        InstructionRouter, MIGPartitioner, NoCRouter,
+                        PageTable, PageTLB, RangeTLB, RangeTranslationTable,
+                        RoutingError, RoutingTableDirectory, RTTEntry,
+                        Topology, TranslationFault, UVMAllocator,
+                        VNPURequest, confined_path, dor_path,
+                        enumerate_connected_subsets, line, mesh_2d,
+                        min_topology_edit_distance, ring,
+                        straightforward_mapping, topology_edit_distance)
+from repro.core.mapping import induced_edit_cost, hungarian, mem_dist_node_match
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+class TestTopology:
+    def test_mesh_structure(self):
+        t = mesh_2d(4, 4)
+        assert t.num_nodes == 16
+        assert t.num_edges == 2 * 4 * 3
+        assert t.is_rect_mesh() == (4, 4)
+        assert t.is_connected()
+        assert t.degree(0) == 2 and t.degree(5) == 4
+
+    def test_subgraph_rect_detection(self):
+        t = mesh_2d(5, 5)
+        sub = t.subgraph([6, 7, 8, 11, 12, 13])
+        assert sub.is_rect_mesh() == (2, 3)
+        ragged = t.subgraph([0, 1, 2, 5])
+        assert ragged.is_rect_mesh() is None
+
+    def test_connectivity(self):
+        t = mesh_2d(3, 3)
+        assert t.is_connected([0, 1, 2])
+        assert not t.is_connected([0, 2])
+        assert t.bfs_hops(0, 8) == 4
+        assert t.bfs_hops(0, 8, allowed=[0, 1, 2, 5, 8]) == 4
+
+    def test_canonical_key_isomorphism(self):
+        t = mesh_2d(4, 4)
+        # two paths of 4 at different positions are isomorphic
+        a = t.subgraph([0, 1, 2, 3]).canonical_key()
+        b = t.subgraph([12, 13, 14, 15]).canonical_key()
+        assert a == b
+        # a star (center 5 with leaves 1, 4, 6) is NOT a path
+        c = t.subgraph([5, 1, 4, 6]).canonical_key()
+        assert c != a
+
+    @given(st.integers(2, 4), st.integers(2, 4), st.integers(2, 5))
+    @settings(max_examples=20, deadline=None)
+    def test_enumerate_connected_subsets_property(self, r, c, k):
+        t = mesh_2d(r, c)
+        seen = set()
+        for s in enumerate_connected_subsets(t, k, max_results=500):
+            assert len(s) == k
+            assert t.is_connected(s)
+            assert s not in seen  # uniqueness
+            seen.add(s)
+
+
+# ---------------------------------------------------------------------------
+# routing tables + vRouter
+# ---------------------------------------------------------------------------
+
+class TestRouting:
+    def test_dense_lookup_and_isolation(self):
+        rt = DenseRoutingTable(1, {0: 5, 1: 6, 2: 9})
+        assert rt.lookup(0) == 5
+        with pytest.raises(RoutingError):
+            rt.lookup(7)
+        with pytest.raises(ValueError):
+            DenseRoutingTable(2, {0: 5, 1: 5})  # duplicate physical
+
+    def test_compact_matches_dense(self):
+        # 2x3 virtual mesh at p_start=6 on a 5-wide physical mesh
+        c = CompactRoutingTable(1, v_start=0, p_start=6, shape=(2, 3),
+                                phys_cols=5)
+        assert c.as_dict() == {0: 6, 1: 7, 2: 8, 3: 11, 4: 12, 5: 13}
+        assert c.storage_bits() < DenseRoutingTable(1, c.as_dict()).storage_bits()
+
+    def test_directory_vmid_isolation(self):
+        d = RoutingTableDirectory()
+        d.install(DenseRoutingTable(1, {0: 0}))
+        d.install(DenseRoutingTable(2, {0: 8}))
+        assert d.translate(1, 0) == 0
+        assert d.translate(2, 0) == 8
+        with pytest.raises(RoutingError):
+            d.translate(3, 0)
+
+    def test_instruction_router_lookup_cache(self):
+        topo = mesh_2d(4, 4)
+        d = RoutingTableDirectory()
+        d.install(DenseRoutingTable(1, {i: i for i in range(16)}))
+        ir = InstructionRouter(d, topo)
+        r1 = ir.dispatch(1, 15)
+        r2 = ir.dispatch(1, 15)   # consecutive same core -> no RT lookup
+        assert r1.rt_lookup and not r2.rt_lookup
+        assert r2.cycles < r1.cycles
+
+    def test_dor_path(self):
+        path = dor_path((0, 0), (2, 3))
+        assert path[0] == (0, 0) and path[-1] == (2, 3)
+        # X first, then Y
+        assert path[1] == (0, 1) and path[4] == (1, 3)
+
+    def test_noc_interference_detection(self):
+        # Fig 5 scenario: vNPU2 = {5,6,7,9,11} (physical); 5->9 via DOR
+        # passes through a foreign core
+        topo = mesh_2d(4, 4)
+        rt = DenseRoutingTable(2, {0: 5, 1: 6, 2: 7, 3: 9, 4: 11})
+        noc = NoCRouter(topo)
+        owned = set(rt.as_dict().values())
+        tr = noc.route(rt, 2, 3, owned, confined=False)  # p7 -> p9
+        assert tr.interference_nodes - owned == tr.interference_nodes
+        tr_conf = noc.route(rt, 2, 3, owned, confined=True)
+        assert not tr_conf.interference_nodes
+        assert set(tr_conf.path) <= owned
+
+    def test_virtualization_overhead_small(self):
+        # Table 3: vSend/vReceive within a few % of bare-metal
+        topo = mesh_2d(4, 4)
+        rt = DenseRoutingTable(1, {i: i for i in range(16)})
+        noc = NoCRouter(topo)
+        v = noc.route(rt, 0, 3, range(16), confined=False, virtualized=True)
+        b = noc.route(rt, 0, 3, range(16), confined=False, virtualized=False)
+        ovh = (v.send_cycles - b.send_cycles) / b.send_cycles
+        assert 0 <= ovh < 0.05
+
+
+# ---------------------------------------------------------------------------
+# vChunk
+# ---------------------------------------------------------------------------
+
+class TestVChunk:
+    def _rtt(self, n=8, size=1 << 20):
+        return RangeTranslationTable(
+            [RTTEntry(vaddr=i * size, paddr=(n - i) * size, size=size)
+             for i in range(n)])
+
+    def test_translate_and_fault(self):
+        rtt = self._rtt()
+        assert rtt.translate(0) == 8 << 20
+        assert rtt.translate((1 << 20) + 5) == (7 << 20) + 5
+        with pytest.raises(TranslationFault):
+            rtt.translate(9 << 20)
+
+    def test_overlap_rejected(self):
+        rtt = self._rtt(2)
+        with pytest.raises(ValueError):
+            rtt.insert(RTTEntry(vaddr=100, paddr=0, size=1 << 20))
+
+    def test_pattern2_monotonic_single_walk_step(self):
+        """Monotonic stream: every miss resolves in one cursor step."""
+        rtt = self._rtt(8)
+        tlb = RangeTLB(rtt, n_entries=4)
+        for va in range(0, 8 << 20, 1 << 18):
+            tlb.translate(va)
+        assert tlb.stats.misses == 8
+        # cursor walk: <=2 table reads per miss (check cur, advance once) —
+        # O(1), vs O(n) for an un-cursored scan
+        assert tlb.stats.walk_steps <= 2 * tlb.stats.misses
+
+    def test_pattern3_last_v_jump_back(self):
+        """Iteration 2+ jumps straight back to the start via last_v."""
+        rtt = self._rtt(8)
+        tlb = RangeTLB(rtt, n_entries=4)
+        for _ in range(3):
+            for va in range(0, 8 << 20, 1 << 19):
+                tlb.translate(va)
+        # without last_v, each wrap-around would scan ~n entries
+        assert tlb.stats.last_v_hits >= 1
+        per_iter = tlb.stats.walk_steps / 3
+        assert per_iter <= 2.5 * 8  # O(1) table reads per miss
+
+    def test_page_tlb_lru(self):
+        pt = PageTable(4096)
+        pt.map_range(0, 1 << 30, 1 << 20)
+        tlb = PageTLB(pt, n_entries=2)
+        for va in (0, 4096, 8192, 0):
+            tlb.translate(va)
+        assert tlb.stats.misses == 4  # 0 was evicted by LRU
+
+    def test_access_counter_throttles(self):
+        ac = AccessCounter(max_bytes_per_window=1000, window_cycles=100)
+        assert ac.record(0, 800)
+        assert not ac.record(10, 300)
+        assert ac.record(150, 300)  # new window
+
+
+# ---------------------------------------------------------------------------
+# buddy allocator
+# ---------------------------------------------------------------------------
+
+class TestBuddy:
+    def test_alloc_free_coalesce(self):
+        b = BuddyAllocator(1 << 30, min_block=1 << 20)
+        a1, s1 = b.alloc(3 << 20)
+        assert s1 == 4 << 20
+        a2, _ = b.alloc(1 << 20)
+        b.free_block(a1)
+        b.free_block(a2)
+        assert b.free_bytes() == 1 << 30
+        a3, s3 = b.alloc(1 << 30)
+        assert s3 == 1 << 30
+
+    @given(st.lists(st.integers(1, 64), min_size=1, max_size=24))
+    @settings(max_examples=25, deadline=None)
+    def test_invariants_property(self, sizes):
+        b = BuddyAllocator(1 << 28, min_block=1 << 20)
+        held = []
+        for i, mb in enumerate(sizes):
+            try:
+                addr, _ = b.alloc(mb << 20)
+                held.append(addr)
+            except Exception:
+                pass
+            if i % 3 == 2 and held:
+                b.free_block(held.pop(0))
+            b.check_invariants()
+        for a in held:
+            b.free_block(a)
+        b.check_invariants()
+        assert b.free_bytes() == 1 << 28
+
+
+# ---------------------------------------------------------------------------
+# topology mapping (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+class TestMapping:
+    def test_hungarian_simple(self):
+        cost = np.array([[4, 1, 3], [2, 0, 5], [3, 2, 2]], float)
+        assign = hungarian(cost)
+        total = sum(cost[i, j] for i, j in enumerate(assign))
+        assert total == 5.0  # optimal
+
+    def test_ted_identical_zero(self):
+        t = mesh_2d(3, 3)
+        d, m = topology_edit_distance(t, mesh_2d(3, 3, base_id=100))
+        assert d == 0.0
+        assert len(m) == 9
+
+    def test_ted_line_vs_ring(self):
+        d, _ = topology_edit_distance(line(5), ring(5, base_id=50))
+        assert d == 1.0  # one extra edge
+
+    def test_induced_cost_consistency(self):
+        t1, t2 = line(4), ring(4, base_id=9)
+        d, m = topology_edit_distance(t1, t2)
+        assert induced_edit_cost(t1, t2, m,
+                                 lambda a, b: 0.0,
+                                 lambda e1, e2: 1.0) == pytest.approx(d)
+
+    def test_paper_lock_in_scenario(self):
+        """Two 3x3 requests on a 5x5 mesh: exact + similar (TED small)."""
+        t = mesh_2d(5, 5)
+        r1 = min_topology_edit_distance(t, [], mesh_2d(3, 3, base_id=100))
+        assert r1 is not None and r1.exact and r1.ted == 0.0
+        r2 = min_topology_edit_distance(t, r1.nodes, mesh_2d(3, 3, base_id=100))
+        assert r2 is not None and not r2.exact
+        assert 0 < r2.ted <= 8
+        assert t.is_connected(r2.nodes)
+        assert not (r1.nodes & r2.nodes)
+
+    def test_similar_beats_straightforward(self):
+        t = mesh_2d(6, 6)
+        blocked = {0, 1, 6, 7, 28, 29, 34, 35}  # corners taken
+        req = mesh_2d(3, 4, base_id=100)
+        sim = min_topology_edit_distance(t, blocked, req)
+        zig = straightforward_mapping(t, blocked, req)
+        assert sim.ted <= zig.ted
+
+    def test_heterogeneous_mem_dist_penalty(self):
+        t = mesh_2d(4, 4, mem_interface_cols=(0,))
+        req = mesh_2d(2, 2, base_id=100, mem_interface_cols=(0,))
+        near = min_topology_edit_distance(
+            t, [], req, node_match=mem_dist_node_match(0.5))
+        # best allocation should hug the memory-interface column
+        cols = {t.coords[n][1] for n in near.nodes}
+        assert min(cols) == 0
+
+    @given(st.integers(3, 5), st.integers(3, 5),
+           st.integers(2, 6), st.integers(0, 6))
+    @settings(max_examples=15, deadline=None)
+    def test_mapping_respects_allocation(self, r, c, k, nblocked):
+        t = mesh_2d(r, c)
+        blocked = set(list(t.nodes())[:nblocked])
+        if k > t.num_nodes - len(blocked):
+            return
+        req = line(k, base_id=200)
+        res = min_topology_edit_distance(t, blocked, req)
+        if res is not None:
+            assert len(res.nodes) == k          # R-1
+            assert not (res.nodes & blocked)     # no poaching
+            assert t.is_connected(res.nodes)     # R-3
+            assert set(res.assignment.values()) == set(res.nodes)
+
+
+# ---------------------------------------------------------------------------
+# hypervisor
+# ---------------------------------------------------------------------------
+
+class TestHypervisor:
+    def _hyp(self):
+        return Hypervisor(mesh_2d(6, 6), hbm_bytes=1 << 32)
+
+    def test_create_destroy_lifecycle(self):
+        hyp = self._hyp()
+        v = hyp.create_vnpu(VNPURequest(topology=mesh_2d(2, 3),
+                                        memory_bytes=64 << 20))
+        assert v.n_cores == 6
+        assert len(v.rtt) >= 1
+        assert v.rtt.translate(0) is not None
+        assert hyp.utilization() == 6 / 36
+        hyp.destroy_vnpu(v.vmid)
+        assert hyp.utilization() == 0.0
+        assert hyp.buddy.free_bytes() == 1 << 32
+
+    def test_memory_exhaustion_rolls_back(self):
+        hyp = Hypervisor(mesh_2d(4, 4), hbm_bytes=1 << 26)  # 64 MB
+        with pytest.raises(AllocationError):
+            hyp.create_vnpu(VNPURequest(topology=mesh_2d(2, 2),
+                                        memory_bytes=1 << 30))
+        assert hyp.utilization() == 0.0
+        assert hyp.buddy.free_bytes() == 1 << 26
+
+    def test_many_tenants_beat_mig_utilization(self):
+        """The paper's core utilization claim: flexible topology fits more."""
+        hyp = self._hyp()
+        for _ in range(4):
+            hyp.create_vnpu(VNPURequest(topology=mesh_2d(3, 3)))
+        assert hyp.utilization() == 1.0
+        mig = MIGPartitioner(mesh_2d(6, 6), [(3, 6), (3, 6)])
+        parts = 0
+        try:
+            for _ in range(4):
+                mig.allocate(9)
+                parts += 1
+        except AllocationError:
+            pass
+        assert parts == 2  # MIG fits only 2 nine-core tenants
+
+    def test_mig_tdm_when_oversubscribed(self):
+        mig = MIGPartitioner(mesh_2d(6, 6), [(4, 6), (2, 6)])
+        part, share = mig.allocate(30)
+        assert share < 1.0
+
+    def test_remap_after_failure(self):
+        hyp = self._hyp()
+        v = hyp.create_vnpu(VNPURequest(topology=mesh_2d(2, 2)))
+        dead = next(iter(v.p_cores))
+        v2 = hyp.remap_vnpu(v.vmid, [dead])
+        assert dead not in v2.p_cores
+        assert len(v2.p_cores) == 4
+
+    def test_uvm_allocator(self):
+        uvm = UVMAllocator(mesh_2d(4, 4))
+        got = uvm.allocate(5)
+        assert len(got) == 5
+        uvm.release(got)
+        assert uvm.allocate(16)
