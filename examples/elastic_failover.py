@@ -1,9 +1,15 @@
-"""Elastic failover drill: train -> checkpoint -> 'device failure' ->
-similar-topology remap -> restore on the new submesh -> keep training.
+"""Elastic failover drill through the cluster placement API:
+train -> checkpoint -> 'device failure' -> policy-driven live migration
+(similar-topology remap avoiding the dead core) -> restore on the new
+submesh -> keep training.
 
-The paper's topology mapper is the failover mechanism: on failure the
-hypervisor re-runs minTopologyEditDistance over the survivors and the
-checkpoint reshards onto whatever submesh came back.
+The paper's topology mapper is the failover mechanism: ``VNPUPolicy.migrate``
+re-runs minTopologyEditDistance over the survivors (the same call the
+cluster scheduler uses for defragmentation — failure is just a migration
+with a forbidden core) and the checkpoint reshards onto whatever submesh
+came back.  The pause charged in the cluster simulator is exactly what this
+drill performs for real: routing-table reinstall + weight re-warm from the
+checkpoint, with the RTT (global memory) preserved.
 
 Run: PYTHONPATH=src python examples/elastic_failover.py
 """
@@ -18,19 +24,24 @@ import jax.numpy as jnp
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs import get_config
 from repro.configs.base import reduce_for_smoke
-from repro.core import DeviceTopology, Hypervisor, allocate_tenant, \
-    elastic_remap, mesh_2d
+from repro.core import DeviceTopology
+from repro.core import simulator as S
+from repro.core.vmesh import virtual_mesh
 from repro.data import DataConfig, make_batch
 from repro.models import build
+from repro.sched import TenantSpec, VNPUPolicy
 from repro.train import AdamWConfig, TrainConfig, init_state, make_train_step
 
 
 def main():
     devs = jax.devices()[:8]
     dt = DeviceTopology.from_devices(devs, (2, 4))
-    hyp = Hypervisor(dt.topo, hbm_bytes=1 << 32)
-    tenant = allocate_tenant(hyp, dt, mesh_2d(2, 2, base_id=100))
-    print(f"tenant on cores {sorted(tenant.vnpu.p_cores)}")
+    policy = VNPUPolicy(dt.topo, hbm_bytes=1 << 32)
+    spec = TenantSpec(tid=1, model="qwen2_0_5b", n_cores=4, arrival_s=0.0,
+                      duration_s=600.0)
+    placement = policy.allocate(spec)
+    mesh = virtual_mesh(placement.vnpu, dt)
+    print(f"tenant on cores {list(placement.cores)}")
 
     cfg = reduce_for_smoke(get_config("qwen2_0_5b"))
     bundle = build(cfg)
@@ -42,7 +53,7 @@ def main():
     def batch_at(i):
         return {k: jnp.asarray(v) for k, v in make_batch(dcfg, i).items()}
 
-    with tenant.mesh:
+    with mesh:
         for i in range(3):
             state, m = step(state, batch_at(i))
     print(f"trained 3 steps, loss={float(m['loss']):.3f}")
@@ -52,17 +63,22 @@ def main():
     print(f"checkpointed at step 3 -> {ckpt}")
 
     # ---- simulated failure of one allocated device --------------------
-    dead = next(iter(tenant.vnpu.p_cores))
+    dead = placement.cores[0]
     print(f"!! device at core {dead} failed")
-    tenant = elastic_remap(hyp, dt, tenant, [dead])
-    print(f"remapped: new cores {sorted(tenant.vnpu.p_cores)} "
-          f"(ted={tenant.vnpu.ted})")
+    placement, moved = policy.migrate(placement, avoid=[dead])
+    assert moved and dead not in placement.cores
+    pause = policy.migration_cycles(placement, 64 << 20,
+                                    S.SIM_CONFIG.hbm_bytes_per_cycle)
+    print(f"migrated: new cores {list(placement.cores)} "
+          f"(ted={placement.vnpu.ted}, modeled pause "
+          f"{pause / S.SIM_CONFIG.freq_hz * 1e3:.2f} ms)")
+    mesh = virtual_mesh(placement.vnpu, dt)
 
     like = jax.eval_shape(lambda: init_state(
         bundle.init(jax.random.PRNGKey(0)), tcfg.opt))
     state, start = restore_checkpoint(ckpt, like)
     print(f"restored step {start} onto the new submesh")
-    with tenant.mesh:
+    with mesh:
         for i in range(start, start + 2):
             state, m = step(state, batch_at(i))
     print(f"resumed training, step={int(state['step'])}, "

@@ -24,8 +24,9 @@ from .mapping import (topology_edit_distance, min_topology_edit_distance,
                       straightforward_mapping, MappingResult,
                       default_node_match, default_edge_match,
                       mem_dist_node_match, critical_edge_match)
-from .hypervisor import (Hypervisor, VNPURequest, VirtualNPU, AllocationError,
-                         MIGPartitioner, UVMAllocator,
+from .baselines import (AllocationError, MIGPartition, MIGPartitioner,
+                        UVMAllocator)
+from .hypervisor import (Hypervisor, VNPURequest, VirtualNPU,
                          make_standard_hypervisor)
 from .vmesh import (DeviceTopology, TenantMesh, virtual_mesh, allocate_tenant,
                     elastic_remap, device_permutation)
@@ -44,7 +45,8 @@ __all__ = [
     "default_node_match", "default_edge_match", "mem_dist_node_match",
     "critical_edge_match",
     "Hypervisor", "VNPURequest", "VirtualNPU", "AllocationError",
-    "MIGPartitioner", "UVMAllocator", "make_standard_hypervisor",
+    "MIGPartition", "MIGPartitioner", "UVMAllocator",
+    "make_standard_hypervisor",
     "DeviceTopology", "TenantMesh", "virtual_mesh", "allocate_tenant",
     "elastic_remap", "device_permutation",
 ]

@@ -1,0 +1,162 @@
+"""Comparison allocators used throughout §6: the MIG-NPU and UVM baselines.
+
+``MIGPartitioner`` (fixed sub-topologies, TDM when oversubscribed — the
+MIG-NPU baseline) and ``UVMAllocator`` (no topology: arbitrary cores, data
+exchanged through global memory — the Aurora/V10-style baseline).
+
+Both expose the same lifecycle surface the scheduler's ``PlacementPolicy``
+adapters need — allocate / release / utilization — so the cluster layer
+(:mod:`repro.sched`) can drive vNPU, MIG and UVM through one interface.
+Historically these lived in :mod:`repro.core.hypervisor`; they are
+re-exported there (and from :mod:`repro.core`) for backward compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .topology import Topology
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# MIG baseline (§6.3.2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MIGPartition:
+    pid: int
+    cores: FrozenSet[int]
+    topology: Topology
+    occupied_by: Optional[int] = None
+
+
+class MIGPartitioner:
+    """Fixed-partition virtualization à la NVIDIA MIG / TPU-v6e slices.
+
+    The physical mesh is split into a predetermined set of rectangular
+    sub-topologies.  Requests get the smallest free partition with at least
+    the requested core count; if none is large enough, multiple virtual cores
+    time-share one physical core (TDM), modeled by ``time_share`` < 1.
+    """
+
+    def __init__(self, phys_topo: Topology, partition_shapes: Sequence[Tuple[int, int]]):
+        self.topo = phys_topo
+        shape = phys_topo.is_rect_mesh()
+        if shape is None:
+            raise ValueError("MIG baseline requires a rectangular mesh")
+        self.mesh_shape = shape
+        self.partitions: List[MIGPartition] = []
+        self._carve(partition_shapes)
+        self._next_vmid = 1
+        # vmid -> (partition id, requested virtual core count)
+        self._tenants: Dict[int, Tuple[int, int]] = {}
+
+    def _carve(self, shapes: Sequence[Tuple[int, int]]) -> None:
+        """Tile the mesh left-to-right, top-to-bottom with the given shapes."""
+        R, C = self.mesh_shape
+        by_coord = {v: k for k, v in self.topo.coords.items()}
+        used: Set[Tuple[int, int]] = set()
+        pid = 0
+        for (r, c) in shapes:
+            placed = False
+            for r0 in range(R - r + 1):
+                for c0 in range(C - c + 1):
+                    cells = {(r0 + i, c0 + j) for i in range(r) for j in range(c)}
+                    if cells & used:
+                        continue
+                    used |= cells
+                    cores = frozenset(by_coord[x] for x in cells)
+                    self.partitions.append(
+                        MIGPartition(pid, cores, self.topo.subgraph(cores)))
+                    pid += 1
+                    placed = True
+                    break
+                if placed:
+                    break
+            if not placed:
+                raise ValueError(f"cannot carve partition {r}x{c}")
+
+    def allocate(self, n_cores: int) -> Tuple[MIGPartition, float]:
+        """Returns (partition, time_share).  time_share < 1 when the request
+        exceeds every free partition and physical cores must be TDM-shared.
+        """
+        free = [p for p in self.partitions if p.occupied_by is None]
+        if not free:
+            raise AllocationError("no free MIG partition")
+        fitting = [p for p in free if len(p.cores) >= n_cores]
+        if fitting:
+            part = min(fitting, key=lambda p: len(p.cores))
+            share = 1.0
+        else:
+            part = max(free, key=lambda p: len(p.cores))
+            share = len(part.cores) / n_cores  # TDM factor (<1)
+        part.occupied_by = self._next_vmid
+        self._tenants[self._next_vmid] = (part.pid, n_cores)
+        self._next_vmid += 1
+        return part, share
+
+    def release(self, pid: int) -> None:
+        part = self.partitions[pid]
+        if part.occupied_by is not None:
+            self._tenants.pop(part.occupied_by, None)
+        part.occupied_by = None
+
+    def utilization_for(self, n_cores: int, part: MIGPartition) -> float:
+        """Fraction of the partition the tenant actually uses."""
+        return min(1.0, n_cores / len(part.cores))
+
+    def utilization(self) -> float:
+        """Useful cores / total: an occupied partition contributes only the
+        cores its tenant asked for — the rest is internal fragmentation
+        (and TDM-shared partitions contribute at most the whole partition).
+        """
+        total = self.topo.num_nodes
+        if not total:
+            return 0.0
+        useful = sum(min(req, len(self.partitions[pid].cores))
+                     for pid, req in self._tenants.values())
+        return useful / total
+
+    def allocated_cores(self) -> Set[int]:
+        return {c for p in self.partitions if p.occupied_by is not None
+                for c in p.cores}
+
+    def free_cores(self) -> Set[int]:
+        return set(self.topo.node_attrs) - self.allocated_cores()
+
+
+# ---------------------------------------------------------------------------
+# UVM baseline (Aurora / V10-style; §6.3.1)
+# ---------------------------------------------------------------------------
+
+class UVMAllocator:
+    """Cores are symmetric and interchangeable; no topology is exposed, all
+    inter-core data exchange goes through global memory.  Allocation is just
+    "any N free cores".
+    """
+
+    def __init__(self, phys_topo: Topology):
+        self.topo = phys_topo
+        self.allocated: Set[int] = set()
+
+    def allocate(self, n_cores: int) -> FrozenSet[int]:
+        free = sorted(set(self.topo.node_attrs) - self.allocated)
+        if len(free) < n_cores:
+            raise AllocationError("not enough free cores")
+        pick = frozenset(free[:n_cores])
+        self.allocated |= pick
+        return pick
+
+    def release(self, cores: Iterable[int]) -> None:
+        self.allocated -= set(cores)
+
+    def utilization(self) -> float:
+        total = self.topo.num_nodes
+        return len(self.allocated) / total if total else 0.0
+
+    def free_cores(self) -> Set[int]:
+        return set(self.topo.node_attrs) - self.allocated

@@ -9,10 +9,9 @@ Manages, per virtual NPU:
     ranges sorted by virtual address,
   * the per-tenant Access Counter bandwidth cap.
 
-Also provides the two comparison allocators used throughout §6:
-``MIGPartitioner`` (fixed sub-topologies, TDM when oversubscribed — the
-MIG-NPU baseline) and ``UVMAllocator`` (no topology: arbitrary cores, data
-exchanged through global memory — the Aurora/V10-style baseline).
+The two comparison allocators used throughout §6 (``MIGPartitioner``,
+``UVMAllocator``) live in :mod:`repro.core.baselines` and are re-exported
+here for backward compatibility.
 """
 from __future__ import annotations
 
@@ -20,18 +19,17 @@ import dataclasses
 import itertools
 from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
 
+from .baselines import (AllocationError, MIGPartition, MIGPartitioner,
+                        UVMAllocator)
 from .buddy import BuddyAllocator, OutOfMemory
 from .mapping import (MappingResult, min_topology_edit_distance,
-                      straightforward_mapping, NodeMatch, EdgeMatch)
+                      straightforward_mapping, mem_dist_node_match,
+                      NodeMatch, EdgeMatch)
 from .routing_table import (DenseRoutingTable, RoutingTable,
                             RoutingTableDirectory, make_routing_table)
 from .topology import Topology, mesh_2d
 from .vchunk import AccessCounter, RangeTranslationTable, RTTEntry
 from .vrouter import NoCRouter, confined_path, path_directions
-
-
-class AllocationError(RuntimeError):
-    pass
 
 
 @dataclasses.dataclass
@@ -215,113 +213,26 @@ class Hypervisor:
         self.directory.install(rt)
         return vnpu
 
+    # -- live migration (defragmentation; used by sched/cluster) ------------
+    def migrate_vnpu(self, vmid: int,
+                     node_match: Optional[NodeMatch] = None,
+                     avoid: Iterable[int] = ()) -> Tuple[VirtualNPU, bool]:
+        """Best-effort defragmenting migration: re-run the similar-topology
+        mapping for a *healthy* tenant with a compaction objective (default:
+        pull allocations toward the memory-interface column via
+        ``mem_dist_node_match``) and reinstall the routing table if a better
+        spot exists.
 
-# ---------------------------------------------------------------------------
-# MIG baseline (§6.3.2)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class MIGPartition:
-    pid: int
-    cores: FrozenSet[int]
-    topology: Topology
-    occupied_by: Optional[int] = None
-
-
-class MIGPartitioner:
-    """Fixed-partition virtualization à la NVIDIA MIG / TPU-v6e slices.
-
-    The physical mesh is split into a predetermined set of rectangular
-    sub-topologies.  Requests get the smallest free partition with at least
-    the requested core count; if none is large enough, multiple virtual cores
-    time-share one physical core (TDM), modeled by ``time_share`` < 1.
-    """
-
-    def __init__(self, phys_topo: Topology, partition_shapes: Sequence[Tuple[int, int]]):
-        self.topo = phys_topo
-        shape = phys_topo.is_rect_mesh()
-        if shape is None:
-            raise ValueError("MIG baseline requires a rectangular mesh")
-        self.mesh_shape = shape
-        self.partitions: List[MIGPartition] = []
-        self._carve(partition_shapes)
-        self._next_vmid = 1
-
-    def _carve(self, shapes: Sequence[Tuple[int, int]]) -> None:
-        """Tile the mesh left-to-right, top-to-bottom with the given shapes."""
-        R, C = self.mesh_shape
-        by_coord = {v: k for k, v in self.topo.coords.items()}
-        used: Set[Tuple[int, int]] = set()
-        pid = 0
-        for (r, c) in shapes:
-            placed = False
-            for r0 in range(R - r + 1):
-                for c0 in range(C - c + 1):
-                    cells = {(r0 + i, c0 + j) for i in range(r) for j in range(c)}
-                    if cells & used:
-                        continue
-                    used |= cells
-                    cores = frozenset(by_coord[x] for x in cells)
-                    self.partitions.append(
-                        MIGPartition(pid, cores, self.topo.subgraph(cores)))
-                    pid += 1
-                    placed = True
-                    break
-                if placed:
-                    break
-            if not placed:
-                raise ValueError(f"cannot carve partition {r}x{c}")
-
-    def allocate(self, n_cores: int) -> Tuple[MIGPartition, float]:
-        """Returns (partition, time_share).  time_share < 1 when the request
-        exceeds every free partition and physical cores must be TDM-shared.
+        Returns ``(vnpu, moved)``.  The RTT (global-memory contents) is
+        preserved; the scheduler charges the pause — scratchpad re-warm from
+        HBM plus routing-table reconfiguration — through the simulator's
+        warmup/RTT cost model.
         """
-        free = [p for p in self.partitions if p.occupied_by is None]
-        if not free:
-            raise AllocationError("no free MIG partition")
-        fitting = [p for p in free if len(p.cores) >= n_cores]
-        if fitting:
-            part = min(fitting, key=lambda p: len(p.cores))
-            share = 1.0
-        else:
-            part = max(free, key=lambda p: len(p.cores))
-            share = len(part.cores) / n_cores  # TDM factor (<1)
-        part.occupied_by = self._next_vmid
-        self._next_vmid += 1
-        return part, share
-
-    def release(self, pid: int) -> None:
-        self.partitions[pid].occupied_by = None
-
-    def utilization_for(self, n_cores: int, part: MIGPartition) -> float:
-        """Fraction of the partition the tenant actually uses."""
-        return min(1.0, n_cores / len(part.cores))
-
-
-# ---------------------------------------------------------------------------
-# UVM baseline (Aurora / V10-style; §6.3.1)
-# ---------------------------------------------------------------------------
-
-class UVMAllocator:
-    """Cores are symmetric and interchangeable; no topology is exposed, all
-    inter-core data exchange goes through global memory.  Allocation is just
-    "any N free cores".
-    """
-
-    def __init__(self, phys_topo: Topology):
-        self.topo = phys_topo
-        self.allocated: Set[int] = set()
-
-    def allocate(self, n_cores: int) -> FrozenSet[int]:
-        free = sorted(set(self.topo.node_attrs) - self.allocated)
-        if len(free) < n_cores:
-            raise AllocationError("not enough free cores")
-        pick = frozenset(free[:n_cores])
-        self.allocated |= pick
-        return pick
-
-    def release(self, cores: Iterable[int]) -> None:
-        self.allocated -= set(cores)
+        old_cores = set(self.vnpus[vmid].p_cores)
+        vnpu = self.remap_vnpu(
+            vmid, failed_cores=avoid,
+            node_match=node_match or mem_dist_node_match(0.5))
+        return vnpu, set(vnpu.p_cores) != old_cores
 
 
 def make_standard_hypervisor(rows: int = 6, cols: int = 6,

@@ -241,19 +241,22 @@ def flow_paths(topo: Topology, flows: Sequence[Flow]) -> List[List[int]]:
 
 def link_contention(paths: Sequence[Sequence[int]],
                     flows: Sequence[Flow]) -> List[float]:
-    """Per-flow slowdown: bytes on its busiest link / its own bytes (>=1)."""
+    """Per-flow slowdown: bytes on its busiest link / its own bytes (>=1).
+
+    Links are full-duplex: the (a, b) and (b, a) directions carry
+    independent bandwidth, so opposing flows do not contend — loads are
+    keyed by *directed* edge.
+    """
     loads: Dict[Tuple[int, int], float] = {}
     for path, f in zip(paths, flows):
-        for a, b in zip(path, path[1:]):
-            e = (a, b) if a <= b else (b, a)
+        for e in zip(path, path[1:]):
             loads[e] = loads.get(e, 0.0) + f.bytes_per_iter
     out = []
     for path, f in zip(paths, flows):
         if len(path) < 2 or f.bytes_per_iter == 0:
             out.append(1.0)
             continue
-        worst = max(loads[(min(a, b), max(a, b))]
-                    for a, b in zip(path, path[1:]))
+        worst = max(loads[e] for e in zip(path, path[1:]))
         out.append(max(1.0, worst / f.bytes_per_iter))
     return out
 
@@ -299,11 +302,9 @@ def tdm_pack(times: Sequence[int], n_physical: int) -> List[int]:
     core').  Returns per-physical-core total loads.
     """
     bins = [0] * max(n_physical, 1)
-    counts = [0] * max(n_physical, 1)
     for t in sorted(times, reverse=True):
         i = min(range(len(bins)), key=lambda j: bins[j])
         bins[i] += t
-        counts[i] += 1
     return bins
 
 
@@ -337,6 +338,46 @@ def _stage_flows(graph: WorkloadGraph, layer_core: Sequence[int],
             agg[key] = agg.get(key, 0) + graph.layers[a].out_bytes
     return [Flow(src=s, dst=d, bytes_per_iter=v, owner=owner)
             for (s, d), v in agg.items()]
+
+
+def _reduce_layers(graph: WorkloadGraph) -> List[Layer]:
+    out = [l for l in graph.layers if l.reduce_out and l.out_bytes]
+    if not out:  # untagged graph: reduce everything (conservative)
+        out = [l for l in graph.layers if l.out_bytes]
+    return out
+
+
+def _ring_flows(graph: WorkloadGraph, cores: Sequence[int],
+                owner: int) -> List[Flow]:
+    """Tensor-parallel ring all-reduce as per-iteration NoC flows between
+    consecutive ring members (the per-link ring volume of every reduced
+    layer)."""
+    n = len(cores)
+    if n < 2:
+        return []
+    per_link = sum(2 * l.out_bytes * (n - 1) // max(n, 1)
+                   for l in _reduce_layers(graph))
+    ring = sorted(cores)
+    return [Flow(src=a, dst=b, bytes_per_iter=per_link, owner=owner)
+            for a, b in zip(ring, ring[1:] + ring[:1])]
+
+
+def tenant_flows(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
+                 hw: HWConfig, owner: int = 1) -> List[Flow]:
+    """The NoC flows one tenant injects per iteration — what its co-residents
+    see as ``external_flows``.
+
+    Pipeline workloads (CNNs): the stage-boundary activation transfers.
+    Tensor-parallel workloads (transformers): the ring all-reduce flows.
+    """
+    n = len(cores)
+    if n == 0:
+        return []
+    if graph.name.startswith(("gpt", "bert", "transformer")):
+        return _ring_flows(graph, cores, owner)
+    layer_core = partition_layers(graph, n,
+                                  cost=lambda l: layer_compute_cycles(l, hw))
+    return _stage_flows(graph, layer_core, list(cores), owner)
 
 
 def simulate_pipeline(
@@ -434,6 +475,7 @@ def simulate_tensor_parallel(
     tdm_physical: Optional[int] = None,
     virtualization_overhead: float = 0.0,
     overlap: float = 0.7,          # fraction of NoC all-reduce hidden by compute
+    external_flows: Sequence[Flow] = (),
 ) -> RunReport:
     """Tensor-partitioned execution (transformers; §6.3's LLM workloads).
 
@@ -441,17 +483,24 @@ def simulate_tensor_parallel(
     all-reduce of its output activation.  Under ``dataflow`` the all-reduce
     runs ring-style on the NoC and mostly overlaps with compute; under
     ``uvm`` each reduction bounces through shared global memory and
-    serializes (§6.3.1's contention argument).
+    serializes (§6.3.1's contention argument).  ``external_flows`` — other
+    tenants' NoC traffic — slow the ring by the contention on its links.
     """
     n = len(cores)
     comp = sum(layer_compute_cycles(l, hw, cores=n) for l in graph.layers)
     hops = avg_pairwise_hops(topo, cores)
 
-    reduce_layers = [l for l in graph.layers if l.reduce_out and l.out_bytes]
-    if not reduce_layers:  # untagged graph: reduce everything (conservative)
-        reduce_layers = [l for l in graph.layers if l.out_bytes]
+    # cross-tenant contention on the ring links
+    contention = 1.0
+    if comm != "uvm" and external_flows:
+        ring = _ring_flows(graph, cores, owner)
+        if ring:
+            all_flows = ring + list(external_flows)
+            factors = link_contention(flow_paths(topo, all_flows), all_flows)
+            contention = sum(factors[: len(ring)]) / len(ring)
+
     ar_cycles = 0
-    for l in reduce_layers:
+    for l in _reduce_layers(graph):
         vol = 2 * l.out_bytes * (n - 1) / max(n, 1)  # ring all-reduce volume
         if comm == "uvm":
             bw = hw.hbm_bytes_per_cycle / max(hbm_concurrency, 1)
@@ -461,7 +510,8 @@ def simulate_tensor_parallel(
         else:
             # ring steps between logically-adjacent, physically-distant cores
             # occupy `hops` links each -> serialization scales with avg hops
-            ser = vol / hw.noc_link_bytes_per_cycle * max(hops, 1.0)
+            ser = vol / hw.noc_link_bytes_per_cycle * max(hops, 1.0) * \
+                contention
             ar_cycles += int(ser + 2 * (n - 1) * hops * hw.noc_hop_cycles)
 
     if tdm_physical is not None and tdm_physical < n:
@@ -496,7 +546,6 @@ def simulate(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
         kw.pop("weight_streaming", None)
         kw.pop("translation", None)
         kw.pop("tlb_entries", None)
-        kw.pop("external_flows", None)
         return simulate_tensor_parallel(graph, cores, topo, hw, **kw)
     return simulate_pipeline(graph, cores, topo, hw, **kw)
 

@@ -1,0 +1,348 @@
+"""The event-driven cluster scheduler.
+
+One loop drives any :class:`~repro.sched.policy.PlacementPolicy` through a
+tenant trace:
+
+* **admission control with queueing** — arrivals that don't fit wait in a
+  FIFO queue (with backfill: a small tenant behind a blocked big one may
+  still be admitted) and abandon after their SLA wait;
+* **defragmentation via live migration** — admission tries a *connected*
+  (strict) placement first; when fragmentation prevents one, resident
+  tenants are migrated (most-scattered first, compaction objective) to
+  consolidate free cores before falling back to a fragmented placement;
+  each move is charged the warmup/RTT-model pause (scratchpad re-warm +
+  routing-table reconfig);
+* **epoch scoring** — between events the resident set is scored with
+  :mod:`repro.core.simulator`; a tenant's ``external_flows`` are the NoC
+  flows its *actual co-residents* inject, and ``hbm_concurrency`` is the
+  number of resident tenants synchronizing through global memory — nothing
+  is hand-set.
+
+The output is a :class:`ClusterMetrics`: time-weighted mean utilization,
+queue-latency percentiles, per-tenant throughput and per-epoch trajectory
+samples (the paper's Figs. 15–18 axes under dynamic arrivals).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import simulator as S
+from ..core.baselines import AllocationError
+from ..core.simulator import Flow, HWConfig, RunReport
+from ..core.workloads import WorkloadGraph
+from .events import ARRIVAL, DEPARTURE, EPOCH, EventQueue, TenantSpec
+from .policy import Placement, PlacementPolicy
+from .traces import get_serving_workload
+
+
+@dataclasses.dataclass
+class ResidentTenant:
+    spec: TenantSpec
+    placement: Placement
+    graph: WorkloadGraph
+    admit_s: float
+    depart_s: float
+    pause_until_s: float = 0.0        # migrating: no throughput until then
+    served_iterations: float = 0.0
+    migrations: int = 0
+
+
+@dataclasses.dataclass
+class EpochSample:
+    t: float
+    utilization: float
+    n_resident: int
+    n_queued: int
+    agg_fps: float                     # sum of effective per-tenant fps
+
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    policy: str
+    trace: str = ""
+    samples: List[EpochSample] = dataclasses.field(default_factory=list)
+    queue_waits_s: List[float] = dataclasses.field(default_factory=list)
+    n_arrived: int = 0
+    n_admitted: int = 0
+    n_rejected: int = 0
+    n_migrations: int = 0
+    util_integral: float = 0.0        # ∫ utilization dt
+    horizon_s: float = 0.0
+    tenant_iterations: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    tenant_active_s: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def mean_utilization(self) -> float:
+        return self.util_integral / self.horizon_s if self.horizon_s else 0.0
+
+    def wait_percentile(self, q: float) -> float:
+        if not self.queue_waits_s:
+            return 0.0
+        return float(np.percentile(np.array(self.queue_waits_s), q))
+
+    @property
+    def p50_wait_s(self) -> float:
+        return self.wait_percentile(50)
+
+    @property
+    def p95_wait_s(self) -> float:
+        return self.wait_percentile(95)
+
+    @property
+    def mean_tenant_fps(self) -> float:
+        rates = [it / act for it, act in
+                 ((self.tenant_iterations[t], self.tenant_active_s[t])
+                  for t in self.tenant_iterations) if act > 0]
+        return float(np.mean(rates)) if rates else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy,
+            "trace": self.trace,
+            "mean_utilization": round(self.mean_utilization, 4),
+            "p50_wait_s": round(self.p50_wait_s, 3),
+            "p95_wait_s": round(self.p95_wait_s, 3),
+            "admitted": self.n_admitted,
+            "rejected": self.n_rejected,
+            "migrations": self.n_migrations,
+            "mean_tenant_fps": round(self.mean_tenant_fps, 2),
+        }
+
+
+class ClusterScheduler:
+    """Event loop binding a placement policy to the analytic simulator."""
+
+    def __init__(self, policy: PlacementPolicy,
+                 hw: Optional[HWConfig] = None,
+                 epoch_s: float = 2.0,
+                 defrag: bool = True,
+                 max_migrations_per_event: int = 2):
+        self.policy = policy
+        self.hw = hw or S.SIM_CONFIG
+        self.topo = policy.topo
+        self.epoch_s = epoch_s
+        self.defrag = defrag
+        self.max_migrations_per_event = max_migrations_per_event
+
+        self._residents: Dict[int, ResidentTenant] = {}
+        self._waiting: List[Tuple[TenantSpec, float]] = []
+        self._scores: Dict[int, RunReport] = {}
+        self._flows: Dict[int, List[Flow]] = {}
+        self._dirty = True
+        self._last_t = 0.0
+        self.metrics = ClusterMetrics(policy=policy.name)
+
+    # -- scoring -----------------------------------------------------------
+    def _tenant_flows(self, rt: ResidentTenant) -> List[Flow]:
+        flows = self._flows.get(rt.spec.tid)
+        if flows is None:
+            if rt.placement.comm == "dataflow":
+                flows = S.tenant_flows(rt.graph, rt.placement.cores,
+                                       self.topo, self.hw,
+                                       owner=rt.spec.tid)
+            else:
+                flows = []   # UVM traffic rides HBM, not the NoC
+            self._flows[rt.spec.tid] = flows
+        return flows
+
+    def _rescore(self) -> None:
+        """Score every resident against its actual co-residents."""
+        hbm_clients = sum(1 for r in self._residents.values()
+                          if r.placement.hbm_client)
+        self._scores = {}
+        for tid, rt in self._residents.items():
+            p = rt.placement
+            kwargs = dict(comm=p.comm, owner=tid,
+                          tdm_physical=p.tdm_physical,
+                          hbm_concurrency=max(hbm_clients, 1))
+            if p.comm == "dataflow":
+                external = [f for other, r2 in self._residents.items()
+                            if other != tid for f in self._tenant_flows(r2)]
+                kwargs["external_flows"] = external
+            self._scores[tid] = S.simulate(
+                rt.graph, list(p.cores), self.topo, self.hw, **kwargs)
+        self._dirty = False
+
+    def _fps(self, tid: int) -> float:
+        if self._dirty:
+            self._rescore()
+        report = self._scores.get(tid)
+        return report.fps if report else 0.0
+
+    # -- time accounting ---------------------------------------------------
+    def _advance(self, now: float) -> None:
+        dt = now - self._last_t
+        if dt <= 0:
+            return
+        self.metrics.util_integral += self.policy.utilization() * dt
+        for tid, rt in self._residents.items():
+            active = dt
+            if rt.pause_until_s > self._last_t:
+                active -= min(rt.pause_until_s, now) - self._last_t
+            if active > 0:
+                rt.served_iterations += self._fps(tid) * active
+        self._last_t = now
+
+    # -- admission ---------------------------------------------------------
+    def _try_place(self, spec: TenantSpec, now: float,
+                   evq: EventQueue, strict: bool = False) -> bool:
+        try:
+            placement = self.policy.allocate(spec, strict=strict)
+        except AllocationError:
+            return False
+        rt = ResidentTenant(
+            spec=spec, placement=placement,
+            graph=get_serving_workload(spec.model),
+            admit_s=now, depart_s=now + spec.duration_s)
+        self._residents[spec.tid] = rt
+        self._dirty = True
+        evq.push(rt.depart_s, DEPARTURE, tid=spec.tid)
+        self.metrics.n_admitted += 1
+        self.metrics.queue_waits_s.append(now - spec.arrival_s)
+        return True
+
+    def _defrag_for(self, spec: TenantSpec, now: float) -> bool:
+        """Migrate residents (most-scattered first, compaction objective)
+        until a *connected* placement for the pending request exists.
+        Returns True if any tenant moved."""
+        if self.policy.can_place(spec, strict=True):
+            return False   # nothing to defragment
+        order = sorted(
+            self._residents.values(),
+            key=lambda r: S.avg_pairwise_hops(self.topo, r.placement.cores),
+            reverse=True)
+        moved_any = False
+        migrations = 0
+        for rt in order:
+            if migrations >= self.max_migrations_per_event:
+                break
+            new_p, moved = self.policy.migrate(rt.placement)
+            if not moved:
+                continue
+            migrations += 1
+            moved_any = True
+            rt.placement = new_p
+            rt.migrations += 1
+            self.metrics.n_migrations += 1
+            pause_cycles = self.policy.migration_cycles(
+                new_p, rt.graph.total_weight_bytes,
+                self.hw.hbm_bytes_per_cycle)
+            rt.pause_until_s = max(rt.pause_until_s,
+                                   now + pause_cycles / self.hw.freq_hz)
+            self._flows.pop(rt.spec.tid, None)
+            self._dirty = True
+            if self.policy.can_place(spec, strict=True):
+                break
+        return moved_any
+
+    def _reject(self, spec: TenantSpec, wait_s: float) -> None:
+        """A tenant that gave up: censor its wait into the latency metrics
+        (otherwise policies that reject more would *look* faster)."""
+        self.metrics.n_rejected += 1
+        self.metrics.queue_waits_s.append(wait_s)
+
+    def _expire_waiting(self, now: float) -> None:
+        kept = []
+        for spec, enq in self._waiting:
+            if now - spec.arrival_s > spec.sla_wait_s:
+                self._reject(spec, spec.sla_wait_s)
+            else:
+                kept.append((spec, enq))
+        self._waiting = kept
+
+    def _drain_queue(self, now: float, evq: EventQueue) -> None:
+        self._expire_waiting(now)
+        still: List[Tuple[TenantSpec, float]] = []
+        for i, (spec, enq) in enumerate(self._waiting):
+            if self._try_place(spec, now, evq, strict=True):
+                continue
+            if i == 0 and self.defrag:
+                # one defrag attempt on behalf of the queue head
+                if self._defrag_for(spec, now) and \
+                        self._try_place(spec, now, evq, strict=True):
+                    continue
+            if self._try_place(spec, now, evq):   # relaxed (fragmented ok)
+                continue
+            still.append((spec, enq))
+        self._waiting = still
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, trace: Sequence[TenantSpec],
+            trace_name: str = "") -> ClusterMetrics:
+        self.metrics = ClusterMetrics(policy=self.policy.name,
+                                      trace=trace_name)
+        evq = EventQueue()
+        for spec in trace:
+            evq.push(spec.arrival_s, ARRIVAL, spec=spec)
+        if self.epoch_s > 0:
+            evq.push(self.epoch_s, EPOCH)
+
+        while evq:
+            ev = evq.pop()
+            now = ev.time
+            self._advance(now)
+            if ev.kind == ARRIVAL:
+                self.metrics.n_arrived += 1
+                spec = ev.spec
+                # strict (connected) first; defragment; only then accept a
+                # fragmented placement — locality is worth one defrag pass
+                placed = self._try_place(spec, now, evq, strict=True)
+                if not placed and self.defrag and not self._waiting:
+                    if self._defrag_for(spec, now):
+                        placed = self._try_place(spec, now, evq, strict=True)
+                if not placed:
+                    placed = self._try_place(spec, now, evq)
+                if not placed:
+                    self._waiting.append((spec, now))
+            elif ev.kind == DEPARTURE:
+                rt = self._residents.pop(ev.tid, None)
+                if rt is not None:
+                    self.policy.release(rt.placement)
+                    self._flows.pop(ev.tid, None)
+                    self._dirty = True
+                    self.metrics.tenant_iterations[ev.tid] = \
+                        rt.served_iterations
+                    self.metrics.tenant_active_s[ev.tid] = \
+                        max(rt.depart_s - rt.admit_s, 0.0)
+                self._drain_queue(now, evq)
+            elif ev.kind == EPOCH:
+                self._drain_queue(now, evq)
+                if self._dirty:
+                    self._rescore()
+                self.metrics.samples.append(EpochSample(
+                    t=now,
+                    utilization=self.policy.utilization(),
+                    n_resident=len(self._residents),
+                    n_queued=len(self._waiting),
+                    agg_fps=sum(self._fps(t) for t in self._residents)))
+                # re-arm while the system still has work in flight
+                if evq:
+                    evq.push(now + self.epoch_s, EPOCH)
+
+        # tenants still waiting when the trace ends count as rejected;
+        # censor their wait at what they actually endured (or their SLA)
+        for spec, enq in self._waiting:
+            self._reject(spec, min(max(self._last_t - spec.arrival_s, 0.0),
+                                   spec.sla_wait_s))
+        self._waiting = []
+        self.metrics.horizon_s = self._last_t
+        return self.metrics
+
+
+def compare_policies(policies: Sequence[PlacementPolicy],
+                     trace: Sequence[TenantSpec],
+                     hw: Optional[HWConfig] = None,
+                     trace_name: str = "",
+                     **sched_kwargs) -> List[ClusterMetrics]:
+    """Run the same trace through several policies (fresh scheduler each)."""
+    out = []
+    for policy in policies:
+        sched = ClusterScheduler(policy, hw=hw, **sched_kwargs)
+        out.append(sched.run(trace, trace_name=trace_name))
+    return out

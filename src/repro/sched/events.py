@@ -1,0 +1,83 @@
+"""Tenant specs and the time-ordered event queue for the cluster loop.
+
+Time is wall-clock seconds (floats); the simulator converts per-iteration
+cycles to throughput at ``HWConfig.freq_hz``.  Events at equal timestamps
+are ordered departure < epoch < arrival (then insertion order), so a
+departure at the same instant as an arrival frees its cores first — the
+scheduler relies on this for back-to-back core reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Iterator, Optional
+
+ARRIVAL = "arrival"
+DEPARTURE = "departure"
+EPOCH = "epoch"
+
+# same-timestamp processing order: free cores, then observe, then admit
+_KIND_PRIORITY = {DEPARTURE: 0, EPOCH: 1, ARRIVAL: 2}
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """What one tenant asks of the cluster: a model, cores, and an SLA.
+
+    ``model`` names a workload graph (``repro.core.workloads.REGISTRY`` or
+    a config-derived serving model from :mod:`repro.sched.traces`).
+    ``sla_wait_s`` is the admission SLA: the tenant abandons the queue (a
+    rejected request) if not placed within that long of arriving.
+    """
+    tid: int
+    model: str
+    n_cores: int
+    arrival_s: float
+    duration_s: float
+    memory_bytes: int = 64 << 20
+    bandwidth_cap: Optional[int] = None
+    sla_wait_s: float = math.inf
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    time: float
+    priority: int
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    spec: Optional[TenantSpec] = dataclasses.field(compare=False, default=None)
+    tid: Optional[int] = dataclasses.field(compare=False, default=None)
+
+
+class EventQueue:
+    """A heap of events ordered by (time, kind priority, insertion seq)."""
+
+    def __init__(self) -> None:
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+
+    def push(self, time: float, kind: str,
+             spec: Optional[TenantSpec] = None,
+             tid: Optional[int] = None) -> Event:
+        ev = Event(time=time, priority=_KIND_PRIORITY.get(kind, 9),
+                   seq=next(self._seq), kind=kind, spec=spec, tid=tid)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def drain(self) -> Iterator[Event]:
+        while self._heap:
+            yield self.pop()

@@ -1,0 +1,275 @@
+"""One placement API for vNPU / MIG / UVM.
+
+``PlacementPolicy`` is the protocol the cluster scheduler drives:
+``allocate`` / ``release`` / ``migrate`` / ``utilization``.  The three
+implementations adapt the core allocators:
+
+* :class:`VNPUPolicy` — the paper's hypervisor: similar-topology mapping
+  with fragmented fallback, dataflow (NoC) communication, live migration
+  for defragmentation (``Hypervisor.migrate_vnpu``);
+* :class:`MIGPolicy` — fixed rectangular partitions, TDM when a request
+  exceeds every free partition; no migration (a partition is a partition);
+* :class:`UVMPolicy` — any free cores, all inter-core traffic through
+  global memory (the HBM-contended baseline); migration is trivial but
+  pointless (no topology to defragment), so it reports "not moved".
+
+``utilization()`` is comparable across policies: fraction of physical
+cores doing *useful* work.  For vNPU/UVM this equals allocated/total
+(allocations are exact); for MIG an occupied partition contributes only
+the cores its tenant requested — the remainder is internal fragmentation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Optional, Sequence, Set, Tuple
+
+from ..core.baselines import AllocationError, MIGPartitioner, UVMAllocator
+from ..core.hypervisor import Hypervisor, VirtualNPU, VNPURequest
+from ..core.mapping import mem_dist_node_match
+from ..core.topology import Topology, mesh_2d
+from ..core.vrouter import rt_config_cost
+from .events import TenantSpec
+
+
+def best_rect(n: int) -> Tuple[int, int]:
+    """Most-square factorization of ``n`` (a line when ``n`` is prime)."""
+    best = (1, n)
+    for r in range(1, int(n ** 0.5) + 1):
+        if n % r == 0:
+            best = (r, n // r)
+    return best
+
+
+@dataclasses.dataclass
+class Placement:
+    """A tenant's admitted footprint, in simulator terms.
+
+    ``cores`` is what the simulator runs the workload on; ``time_share`` /
+    ``tdm_physical`` carry the MIG oversubscription; ``comm`` selects the
+    NoC-vs-global-memory communication style; ``hbm_client`` marks the
+    tenant as a shared-HBM-bandwidth consumer (UVM sync traffic).
+    ``vnpu`` is set by :class:`VNPUPolicy` only — it is the handle the JAX
+    mesh integration (:func:`repro.core.vmesh.virtual_mesh`) consumes.
+    """
+    tid: int
+    cores: Tuple[int, ...]
+    time_share: float = 1.0
+    comm: str = "dataflow"            # simulator comm mode
+    tdm_physical: Optional[int] = None
+    hbm_client: bool = False
+    handle: object = None             # policy-private
+    vnpu: Optional[VirtualNPU] = None
+
+    @property
+    def n_cores(self) -> int:
+        return len(set(self.cores))
+
+
+class PlacementPolicy:
+    """Protocol + shared plumbing for cluster placement policies."""
+
+    name: str = "abstract"
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self.placements: Dict[int, Placement] = {}
+
+    # -- protocol ----------------------------------------------------------
+    def allocate(self, spec: TenantSpec, strict: bool = False) -> Placement:
+        """Place a tenant or raise :class:`AllocationError`.
+
+        ``strict`` asks for the high-quality placement only (for vNPU: a
+        *connected* sub-topology, no fragmented fallback) — the scheduler
+        tries strict first, defragments, and only then relaxes.  Policies
+        without a quality distinction ignore the flag.
+        """
+        raise NotImplementedError
+
+    def can_place(self, spec: TenantSpec, strict: bool = False) -> bool:
+        """Side-effect-free feasibility probe for ``allocate``."""
+        return len(self.free_cores()) >= spec.n_cores
+
+    def release(self, placement: Placement) -> None:
+        raise NotImplementedError
+
+    def migrate(self, placement: Placement,
+                avoid: Sequence[int] = ()) -> Tuple[Placement, bool]:
+        """Best-effort move to a better spot.  Default: cannot move."""
+        return placement, False
+
+    def utilization(self) -> float:
+        raise NotImplementedError
+
+    # -- shared ------------------------------------------------------------
+    def free_cores(self) -> Set[int]:
+        raise NotImplementedError
+
+    def migration_cycles(self, placement: Placement,
+                         weight_bytes: int, hbm_bytes_per_cycle: float) -> int:
+        """Pause charged for one live migration: scratchpad re-warm from HBM
+        (the RTT — global-memory contents — is preserved, so no data copy)
+        plus routing-table reconfiguration (Fig. 11 model)."""
+        warm = int(weight_bytes / max(hbm_bytes_per_cycle, 1e-9))
+        return warm + rt_config_cost(placement.n_cores)["total_cycles"]
+
+    def _register(self, p: Placement) -> Placement:
+        self.placements[p.tid] = p
+        return p
+
+    def _unregister(self, p: Placement) -> None:
+        self.placements.pop(p.tid, None)
+
+
+class VNPUPolicy(PlacementPolicy):
+    """The paper's hypervisor behind the placement protocol."""
+
+    name = "vnpu"
+
+    def __init__(self, topo: Topology, hbm_bytes: int = 1 << 36,
+                 hypervisor: Optional[Hypervisor] = None,
+                 require_connected: bool = False):
+        super().__init__(topo)
+        self.hyp = hypervisor or Hypervisor(topo, hbm_bytes=hbm_bytes)
+        self.require_connected = require_connected
+
+    def _request(self, spec: TenantSpec, strict: bool) -> VNPURequest:
+        return VNPURequest(
+            topology=mesh_2d(*best_rect(spec.n_cores), base_id=10_000),
+            memory_bytes=spec.memory_bytes,
+            bandwidth_cap=spec.bandwidth_cap,
+            require_connected=strict or self.require_connected)
+
+    def allocate(self, spec: TenantSpec, strict: bool = False) -> Placement:
+        vnpu = self.hyp.create_vnpu(self._request(spec, strict))
+        return self._register(Placement(
+            tid=spec.tid, cores=tuple(sorted(vnpu.p_cores)),
+            comm="dataflow", handle=vnpu.vmid, vnpu=vnpu))
+
+    def can_place(self, spec: TenantSpec, strict: bool = False) -> bool:
+        from ..core.mapping import min_topology_edit_distance
+
+        if len(self.hyp.free_cores()) < spec.n_cores:
+            return False
+        if not (strict or self.require_connected):
+            return True
+        result = min_topology_edit_distance(
+            self.topo, self.hyp.allocated_cores(),
+            self._request(spec, strict).topology, require_connected=True)
+        return result is not None
+
+    def release(self, placement: Placement) -> None:
+        self.hyp.destroy_vnpu(placement.handle)
+        self._unregister(placement)
+
+    def migrate(self, placement: Placement,
+                avoid: Sequence[int] = ()) -> Tuple[Placement, bool]:
+        try:
+            vnpu, moved = self.hyp.migrate_vnpu(
+                placement.handle, node_match=mem_dist_node_match(0.5),
+                avoid=avoid)
+        except AllocationError:
+            return placement, False
+        if not moved:
+            return placement, False
+        new = dataclasses.replace(
+            placement, cores=tuple(sorted(vnpu.p_cores)), vnpu=vnpu)
+        return self._register(new), True
+
+    def utilization(self) -> float:
+        return self.hyp.utilization()
+
+    def free_cores(self) -> Set[int]:
+        return self.hyp.free_cores()
+
+
+class MIGPolicy(PlacementPolicy):
+    """Fixed partitions; the whole partition is held whatever the request."""
+
+    name = "mig"
+
+    def __init__(self, topo: Topology,
+                 partition_shapes: Sequence[Tuple[int, int]] = ()):
+        super().__init__(topo)
+        if not partition_shapes:
+            shape = topo.is_rect_mesh()
+            if shape is None:
+                raise ValueError("MIG policy requires a rectangular mesh")
+            r, c = shape
+            # default carve: quadrants (the finest square MIG slicing)
+            partition_shapes = [(r - r // 2, c - c // 2), (r - r // 2, c // 2),
+                                (r // 2, c - c // 2), (r // 2, c // 2)]
+            partition_shapes = [(a, b) for a, b in partition_shapes
+                                if a > 0 and b > 0]
+        self.mig = MIGPartitioner(topo, partition_shapes)
+
+    def allocate(self, spec: TenantSpec, strict: bool = False) -> Placement:
+        part, share = self.mig.allocate(spec.n_cores)
+        pcores = sorted(part.cores)
+        if share >= 1.0:
+            cores = tuple(pcores[: spec.n_cores])
+            tdm = None
+        else:
+            # oversubscribed: spec.n_cores virtual cores time-share the
+            # partition's physical cores round-robin
+            cores = tuple(itertools.islice(itertools.cycle(pcores),
+                                           spec.n_cores))
+            tdm = len(pcores)
+        return self._register(Placement(
+            tid=spec.tid, cores=cores, time_share=share, comm="dataflow",
+            tdm_physical=tdm, handle=part.pid))
+
+    def can_place(self, spec: TenantSpec, strict: bool = False) -> bool:
+        # TDM makes any free partition admissible, whatever the request
+        return any(p.occupied_by is None for p in self.mig.partitions)
+
+    def release(self, placement: Placement) -> None:
+        self.mig.release(placement.handle)
+        self._unregister(placement)
+
+    def utilization(self) -> float:
+        return self.mig.utilization()
+
+    def free_cores(self) -> Set[int]:
+        return self.mig.free_cores()
+
+
+class UVMPolicy(PlacementPolicy):
+    """Topology-blind allocation; all cross-core traffic rides shared HBM."""
+
+    name = "uvm"
+
+    def __init__(self, topo: Topology):
+        super().__init__(topo)
+        self.uvm = UVMAllocator(topo)
+
+    def allocate(self, spec: TenantSpec, strict: bool = False) -> Placement:
+        cores = self.uvm.allocate(spec.n_cores)
+        return self._register(Placement(
+            tid=spec.tid, cores=tuple(sorted(cores)), comm="uvm",
+            hbm_client=True, handle=cores))
+
+    def release(self, placement: Placement) -> None:
+        self.uvm.release(placement.handle)
+        self._unregister(placement)
+
+    def utilization(self) -> float:
+        return self.uvm.utilization()
+
+    def free_cores(self) -> Set[int]:
+        return self.uvm.free_cores()
+
+
+POLICIES = {
+    "vnpu": VNPUPolicy,
+    "mig": MIGPolicy,
+    "uvm": UVMPolicy,
+}
+
+
+def make_policy(name: str, topo: Topology, **kwargs) -> PlacementPolicy:
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(POLICIES)}")
+    return cls(topo, **kwargs)

@@ -1,0 +1,179 @@
+"""Tenant arrival traces: Poisson and named mixes.
+
+Each trace is a list of :class:`TenantSpec` — model + core count + SLA —
+drawn from a catalog that combines the simulator's workload registry
+(:mod:`repro.core.workloads`) with serving-model proxies derived from the
+real model configs under :mod:`repro.configs` (a config's depth/width/vocab
+become a tensor-parallel transformer graph the simulator can score).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import workloads as W
+from .events import TenantSpec
+
+# ---------------------------------------------------------------------------
+# serving-model proxies from repro.configs
+# ---------------------------------------------------------------------------
+
+# arch id -> decode sequence length for the serving proxy graph
+_CONFIG_PROXIES: Dict[str, int] = {
+    "llama3_2_1b": 512,
+    "qwen2_0_5b": 512,
+    "qwen2_7b": 256,
+}
+
+_GRAPH_CACHE: Dict[str, W.WorkloadGraph] = {}
+
+
+def _config_graph(arch: str, seq: int) -> W.WorkloadGraph:
+    """Build a tensor-parallel transformer graph from a ModelConfig's
+    published dimensions.  The ``transformer_`` name prefix routes it to the
+    simulator's tensor-parallel execution model."""
+    from ..configs import get_config
+
+    cfg = get_config(arch)
+    d_ff_mult = max(1, round(cfg.d_ff / cfg.d_model))
+    return W._transformer(f"transformer_{arch}", cfg.n_layers, cfg.d_model,
+                          seq, d_ff_mult=d_ff_mult, vocab=cfg.vocab_size)
+
+
+def get_serving_workload(name: str) -> W.WorkloadGraph:
+    """Workload registry + config proxies, cached (graphs are immutable
+    inputs to the analytic simulator)."""
+    g = _GRAPH_CACHE.get(name)
+    if g is None:
+        if name in _CONFIG_PROXIES:
+            g = _config_graph(name, _CONFIG_PROXIES[name])
+        else:
+            g = W.get_workload(name)
+        _GRAPH_CACHE[name] = g
+    return g
+
+
+# ---------------------------------------------------------------------------
+# catalog + trace config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CatalogEntry:
+    """One tenant class: which model, how many cores it may ask for, its
+    admission SLA, and its sampling weight in the mix."""
+    model: str
+    cores: Tuple[int, ...]
+    sla_wait_s: float = 30.0
+    weight: float = 1.0
+
+
+# The mixed cloud catalog: small CNN inference, mid-size detection,
+# LLM serving from the config registry, and big batch transformers.
+MIXED_CATALOG: Tuple[CatalogEntry, ...] = (
+    CatalogEntry("yolo_lite", (2, 3), sla_wait_s=10.0, weight=2.0),
+    CatalogEntry("mobilenet", (2, 4), sla_wait_s=10.0, weight=2.0),
+    CatalogEntry("resnet18", (4, 6), sla_wait_s=15.0, weight=2.0),
+    CatalogEntry("resnet50", (6, 8), sla_wait_s=20.0, weight=1.5),
+    CatalogEntry("qwen2_0_5b", (4, 6), sla_wait_s=20.0, weight=1.5),
+    CatalogEntry("llama3_2_1b", (8, 9), sla_wait_s=30.0, weight=1.0),
+    CatalogEntry("transformer", (6, 8), sla_wait_s=30.0, weight=1.0),
+    CatalogEntry("gpt2_small", (12,), sla_wait_s=45.0, weight=0.75),
+    CatalogEntry("qwen2_7b", (16,), sla_wait_s=60.0, weight=0.25),
+)
+
+SMALL_CATALOG: Tuple[CatalogEntry, ...] = (
+    CatalogEntry("yolo_lite", (2,), sla_wait_s=8.0, weight=2.0),
+    CatalogEntry("mobilenet", (2, 4), sla_wait_s=8.0, weight=2.0),
+    CatalogEntry("resnet18", (4,), sla_wait_s=10.0, weight=1.0),
+    CatalogEntry("qwen2_0_5b", (4,), sla_wait_s=12.0, weight=1.0),
+)
+
+LARGE_CATALOG: Tuple[CatalogEntry, ...] = (
+    CatalogEntry("gpt2_small", (12,), sla_wait_s=60.0, weight=1.0),
+    CatalogEntry("gpt2_medium", (18,), sla_wait_s=90.0, weight=0.5),
+    CatalogEntry("llama3_2_1b", (9, 12), sla_wait_s=45.0, weight=1.0),
+    CatalogEntry("qwen2_7b", (16, 24), sla_wait_s=90.0, weight=0.5),
+    CatalogEntry("resnet50", (8, 12), sla_wait_s=30.0, weight=1.0),
+)
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    name: str = "mixed"
+    seed: int = 0
+    horizon_s: float = 120.0          # arrivals stop here; departures run on
+    rate_per_s: float = 0.45
+    service_mean_s: float = 25.0
+    catalog: Sequence[CatalogEntry] = MIXED_CATALOG
+    # bursty traffic: cycle of (phase_length_s, rate_per_s) overriding
+    # rate_per_s when set
+    rate_phases: Optional[Sequence[Tuple[float, float]]] = None
+
+
+def poisson_trace(cfg: TraceConfig) -> List[TenantSpec]:
+    """Sample a Poisson (or phase-modulated Poisson) arrival process over
+    the catalog.  Deterministic for a given seed — every policy in a
+    comparison consumes the *same* tenant sequence."""
+    rng = np.random.default_rng(cfg.seed)
+    weights = np.array([e.weight for e in cfg.catalog], float)
+    weights /= weights.sum()
+
+    def rate_at(t: float) -> float:
+        if not cfg.rate_phases:
+            return cfg.rate_per_s
+        cycle = sum(p for p, _ in cfg.rate_phases)
+        u = t % cycle
+        for phase_len, rate in cfg.rate_phases:
+            if u < phase_len:
+                return rate
+            u -= phase_len
+        return cfg.rate_phases[-1][1]
+
+    specs: List[TenantSpec] = []
+    t = 0.0
+    tid = 1
+    while True:
+        t += float(rng.exponential(1.0 / max(rate_at(t), 1e-9)))
+        if t >= cfg.horizon_s:
+            break
+        entry = cfg.catalog[int(rng.choice(len(cfg.catalog), p=weights))]
+        n_cores = int(rng.choice(entry.cores))
+        duration = float(np.clip(rng.exponential(cfg.service_mean_s),
+                                 cfg.service_mean_s * 0.2,
+                                 cfg.service_mean_s * 4.0))
+        graph = get_serving_workload(entry.model)
+        specs.append(TenantSpec(
+            tid=tid, model=entry.model, n_cores=n_cores, arrival_s=t,
+            duration_s=duration,
+            memory_bytes=max(graph.total_weight_bytes, 1 << 20),
+            sla_wait_s=entry.sla_wait_s))
+        tid += 1
+    return specs
+
+
+TRACES: Dict[str, TraceConfig] = {
+    "mixed": TraceConfig(name="mixed"),
+    "small": TraceConfig(name="small", catalog=SMALL_CATALOG,
+                         rate_per_s=0.9, service_mean_s=15.0),
+    "large": TraceConfig(name="large", catalog=LARGE_CATALOG,
+                         rate_per_s=0.15, service_mean_s=40.0),
+    "bursty": TraceConfig(name="bursty",
+                          rate_phases=((20.0, 1.2), (20.0, 0.1))),
+}
+
+
+def make_trace(name: str, seed: Optional[int] = None,
+               horizon_s: Optional[float] = None) -> List[TenantSpec]:
+    try:
+        cfg = TRACES[name]
+    except KeyError:
+        raise KeyError(f"unknown trace {name!r}; have {sorted(TRACES)}")
+    if seed is not None or horizon_s is not None:
+        cfg = dataclasses.replace(
+            cfg,
+            seed=cfg.seed if seed is None else seed,
+            horizon_s=cfg.horizon_s if horizon_s is None else horizon_s)
+    return poisson_trace(cfg)
