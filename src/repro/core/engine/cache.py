@@ -1,0 +1,86 @@
+"""Content-addressed LRU cache for minTopologyEditDistance results.
+
+Keys are ``(free-region canonical key, request canonical key, node-match id,
+edge-match id, mapper name, max_candidates)``.  Values are stored in
+*canonical index space* (positions within the region's and request's
+canonical node orders), so one entry serves every translated placement of
+the same region shape — the hit is translated back to concrete core ids
+through the current :class:`~repro.core.engine.regions.RegionSignature`.
+
+Invalidation is structural rather than explicit: the hypervisor's
+allocate/release notifications update the :class:`FreeRegions` tracker,
+every component mutation mints a fresh canonical key, and entries for
+shapes that no longer occur simply age out of the LRU.  A stale entry is
+unreachable by construction — there is no epoch/version protocol to get
+wrong.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, FrozenSet, Hashable, Optional, Sequence, Tuple
+
+from ..mapping import MappingResult
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedMapping:
+    """A MappingResult lifted into canonical index space."""
+    ted: float
+    nodes_idx: Tuple[int, ...]                 # indices into the region order
+    assign_idx: Tuple[Tuple[int, int], ...]    # (request idx, region idx)
+    exact: bool
+    candidates_evaluated: int
+
+
+def encode_result(result: MappingResult, region_order: Sequence[int],
+                  request_order: Sequence[int]) -> CachedMapping:
+    rpos = {n: i for i, n in enumerate(region_order)}
+    qpos = {n: i for i, n in enumerate(request_order)}
+    return CachedMapping(
+        ted=result.ted,
+        nodes_idx=tuple(sorted(rpos[n] for n in result.nodes)),
+        assign_idx=tuple(sorted((qpos[v], rpos[p])
+                                for v, p in result.assignment.items())),
+        exact=result.exact,
+        candidates_evaluated=result.candidates_evaluated)
+
+
+def decode_result(entry: CachedMapping, region_order: Sequence[int],
+                  request_order: Sequence[int]) -> MappingResult:
+    return MappingResult(
+        nodes=frozenset(region_order[i] for i in entry.nodes_idx),
+        ted=entry.ted,
+        assignment={request_order[qi]: region_order[ri]
+                    for qi, ri in entry.assign_idx},
+        exact=entry.exact,
+        candidates_evaluated=entry.candidates_evaluated)
+
+
+class TEDCache:
+    """Bounded LRU over canonical mapping results."""
+
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self._data: "OrderedDict[Hashable, Optional[CachedMapping]]" = \
+            OrderedDict()
+
+    def get(self, key: Hashable) -> Tuple[bool, Optional[CachedMapping]]:
+        """(found, entry) — ``entry`` may be None (a cached negative:
+        the region provably has no candidate for that request)."""
+        if key not in self._data:
+            return False, None
+        self._data.move_to_end(key)
+        return True, self._data[key]
+
+    def put(self, key: Hashable, entry: Optional[CachedMapping]) -> None:
+        self._data[key] = entry
+        self._data.move_to_end(key)
+        while len(self._data) > self.max_entries:
+            self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def __len__(self) -> int:
+        return len(self._data)

@@ -1,0 +1,262 @@
+"""Pluggable mapping strategies over one free component.
+
+Every :class:`Mapper` turns (request, free component) into the best
+:class:`~repro.core.mapping.MappingResult` it is willing to pay for:
+
+* ``rect``      — rectangle-greedy: first exact-shape rectangle window
+  (identity row-major assignment), else the single best-effort blob.  No
+  assignment optimization; the cheapest speed point.
+* ``bipartite`` — batched Riesen–Bunke over the full candidate pool; the
+  vectorized equivalent of the legacy large-request path.
+* ``hybrid``    — bipartite ranking plus escalation on the best-ranked
+  candidates: exact branch & bound (budget-seeded) for small requests,
+  Hungarian cross-check + 2-opt descent above the exact threshold.  The
+  engine default.
+* ``exact``     — branch & bound on *every* candidate (exponential in the
+  request size; ground truth for tests and small configs).
+
+Escalation order is ascending bipartite cost with a running global budget,
+with an edge-count lower-bound skip under the default edge-match — most
+candidates are eliminated without entering the B&B at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..mapping import (EdgeMatch, MappingResult, NodeMatch,
+                       _exact_ged_same_size)
+from ..topology import Topology
+from . import batch
+from .candidates import component_candidates
+
+EXACT_ESCALATION_LIMIT = 64     # max B&B escalations per component (hybrid)
+REFINE_TOP_K = 16               # 2-opt / cross-check pool above exact sizes
+
+
+@dataclasses.dataclass
+class MapContext:
+    """Everything a mapper needs for one request, prepared by the engine."""
+    topo: Topology
+    adj: Dict[int, Tuple[int, ...]]
+    pool: batch.PoolArrays
+    t_req: Topology
+    req: batch.RequestSpec
+    nm: NodeMatch
+    em: EdgeMatch
+    nm_id: Optional[str]
+    em_id: Optional[str]
+    Wspur: np.ndarray
+    exact_max: int
+    max_candidates: int
+    stats: "object" = None       # EngineStats, duck-typed
+
+
+def _result_from(ctx: MapContext, cand: Sequence[int], perm: np.ndarray,
+                 ted: float, evaluated: int) -> MappingResult:
+    assignment = {ctx.req.order[i]: int(cand[perm[i]])
+                  for i in range(len(ctx.req.order))}
+    return MappingResult(nodes=frozenset(int(n) for n in cand), ted=float(ted),
+                         assignment=assignment, exact=(ted == 0.0),
+                         candidates_evaluated=evaluated)
+
+
+def _bnb(ctx: MapContext, cand: Sequence[int], budget: float
+         ) -> Tuple[Optional[float], Optional[Dict[int, int]]]:
+    """Budgeted exact branch & bound on one candidate subgraph."""
+    sub = ctx.topo.subgraph(cand)
+    cost, mapping = _exact_ged_same_size(ctx.t_req, sub, ctx.nm, ctx.em,
+                                         budget=budget)
+    if not mapping:
+        return None, None
+    return cost, mapping
+
+
+def _bnb_perm(ctx: MapContext, cand: Sequence[int], budget: float
+              ) -> Tuple[Optional[float], Optional[np.ndarray]]:
+    """Budgeted B&B returning the assignment as a canonical-order perm."""
+    cost, mapping = _bnb(ctx, cand, budget)
+    if cost is None:
+        return None, None
+    slot = {node: i for i, node in enumerate(ctx.req.order)}
+    pos = {node: i for i, node in enumerate(cand)}
+    perm = np.empty(len(ctx.req.order), dtype=np.int64)
+    for v, p in mapping.items():
+        perm[slot[v]] = pos[p]
+    return cost, perm
+
+
+def _edge_count_lb(ctx: MapContext, score: batch.PoolScore, c: int) -> float:
+    """Sound lower bound on the edit cost of candidate ``c``: any bijection
+    must edit at least |E_req - E_cand| edges, each costing at least the
+    cheapest edge involved (request-edge deletion costs when the request has
+    more edges, candidate-edge insertion costs when the candidate does)."""
+    d = ctx.req.n_edges - int(score.n_edges[c])
+    if d > 0:
+        miss = ctx.req.W_miss[ctx.req.A]
+        return d * float(miss.min()) if miss.size else 0.0
+    if d < 0:
+        spur = score.Wsp[c][score.A[c]]
+        return -d * float(spur.min()) if spur.size else 0.0
+    return 0.0
+
+
+class Mapper:
+    """Strategy protocol: best mapping of the request into one component."""
+
+    name = "abstract"
+
+    def map_component(self, ctx: MapContext,
+                      comp: FrozenSet[int]) -> Optional[MappingResult]:
+        raise NotImplementedError
+
+    # -- shared plumbing ----------------------------------------------------
+    def _candidates(self, ctx: MapContext,
+                    comp: FrozenSet[int]) -> List[Tuple[int, ...]]:
+        return component_candidates(ctx.topo, ctx.adj, comp,
+                                    len(ctx.req.order),
+                                    max_candidates=ctx.max_candidates)
+
+    def _score(self, ctx: MapContext,
+               cands: List[Tuple[int, ...]]) -> batch.PoolScore:
+        idx = np.array([[ctx.pool.index[n] for n in cand] for cand in cands],
+                       dtype=np.int64)
+        return batch.score_pool(ctx.pool, ctx.req, idx, ctx.Wspur,
+                                ctx.nm, ctx.nm_id)
+
+
+class BipartiteMapper(Mapper):
+    """Batched bipartite approximation, no escalation."""
+
+    name = "bipartite"
+    refine_top_k = 0
+    escalate = False
+    escalate_limit: Optional[int] = EXACT_ESCALATION_LIMIT
+    escalate_any_size = False      # else only requests <= ctx.exact_max
+
+    def map_component(self, ctx: MapContext,
+                      comp: FrozenSet[int]) -> Optional[MappingResult]:
+        cands = self._candidates(ctx, comp)
+        if not cands:
+            return None
+        score = self._score(ctx, cands)
+        order = np.argsort(score.costs, kind="stable")
+        best_c = int(order[0])
+        best_cost = float(score.costs[best_c])
+        best_perm = score.perms[best_c]
+        best_nodes = cands[best_c]
+
+        if best_cost > 0.0 and self.refine_top_k > 0:
+            for c in order[:self.refine_top_k]:
+                c = int(c)
+                cost, perm = batch.hungarian_crosscheck(ctx.req, score, c)
+                if cost < float(score.costs[c]):
+                    score.costs[c] = cost
+                    score.perms[c] = perm
+                cost2, perm2 = batch.refine_assignment(ctx.req, score, c)
+                if cost2 < float(score.costs[c]):
+                    score.costs[c] = cost2
+                    score.perms[c] = perm2
+                if score.costs[c] < best_cost:
+                    best_cost = float(score.costs[c])
+                    best_perm = score.perms[c]
+                    best_c, best_nodes = c, cands[c]
+                if best_cost == 0.0:
+                    break
+
+        if best_cost > 0.0 and self.escalate and \
+                (self.escalate_any_size
+                 or len(ctx.req.order) <= ctx.exact_max):
+            best_cost, best_perm, best_nodes = self._escalate(
+                ctx, cands, score, order, best_cost, best_perm, best_nodes)
+
+        return _result_from(ctx, best_nodes, np.asarray(best_perm),
+                            best_cost, len(cands))
+
+    def _escalate(self, ctx, cands, score, order, best_cost, best_perm,
+                  best_nodes):
+        """Exact B&B over the best-ranked candidates with a running budget."""
+        n = 0
+        for c in order:
+            if best_cost == 0.0 or (self.escalate_limit is not None
+                                    and n >= self.escalate_limit):
+                break
+            c = int(c)
+            if _edge_count_lb(ctx, score, c) >= best_cost:
+                continue
+            n += 1
+            if ctx.stats is not None:
+                ctx.stats.exact_escalations += 1
+            cost, perm = _bnb_perm(ctx, cands[c], budget=best_cost + 1e-9)
+            if cost is not None and cost < best_cost:
+                best_cost, best_perm, best_nodes = cost, perm, cands[c]
+        return best_cost, best_perm, best_nodes
+
+
+class HybridMapper(BipartiteMapper):
+    """Bipartite ranking + exact/2-opt escalation — the engine default."""
+
+    name = "hybrid"
+    refine_top_k = REFINE_TOP_K
+    escalate = True
+
+
+class ExactMapper(BipartiteMapper):
+    """Branch & bound on every candidate, whatever the request size (the
+    sound ``_edge_count_lb`` skip and the shrinking global budget still
+    prune, so exactness over the pool is preserved).  Exponential in the
+    request size — ground truth for tests and small paper configs only."""
+
+    name = "exact"
+    escalate = True
+    escalate_limit = None
+    escalate_any_size = True
+
+
+class RectangleGreedyMapper(Mapper):
+    """First-fit: an exact-shape rectangle window if one exists, else the
+    *first proposed* candidate scored by one bipartite solve — no pool-wide
+    scoring, by design the cheapest (and least accurate) strategy."""
+
+    name = "rect"
+
+    def map_component(self, ctx: MapContext,
+                      comp: FrozenSet[int]) -> Optional[MappingResult]:
+        from .candidates import rect_windows
+
+        shape = ctx.t_req.is_rect_mesh()
+        if shape is not None:
+            k = len(ctx.req.order)
+            # only windows of the request's exact shape — each is an
+            # unclipped full rectangle, so no per-window shape re-check
+            windows = rect_windows(ctx.topo, set(comp), k,
+                                   shapes=[(shape[0], shape[1], 0)])
+            if windows:
+                # request canonical order and window order are both
+                # row-major: the identity permutation aligns them
+                cand = windows[0]
+                score = self._score(ctx, [cand])
+                ident = np.arange(k, dtype=np.int64)
+                cost = float(batch.induced_batch(
+                    ctx.req.A, ctx.req.W_miss, score.A, score.Wsp,
+                    score.Cnode, ident[None])[0])
+                return _result_from(ctx, cand, ident, cost, 1)
+        cands = self._candidates(ctx, comp)
+        if not cands:
+            return None
+        score = self._score(ctx, cands[:1])
+        return _result_from(ctx, cands[0], score.perms[0],
+                            float(score.costs[0]), 1)
+
+
+MAPPERS = {
+    cls.name: cls
+    for cls in (HybridMapper, BipartiteMapper, ExactMapper,
+                RectangleGreedyMapper)
+}
+
+
+def make_mappers() -> Dict[str, Mapper]:
+    return {name: cls() for name, cls in MAPPERS.items()}

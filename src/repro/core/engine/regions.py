@@ -1,0 +1,207 @@
+"""Incremental free-region tracking + canonical region signatures.
+
+The pre-engine mapper re-derived the free set and its connected components
+from scratch on every allocation (``set(topo.node_attrs) - allocated`` plus
+a BFS per candidate).  :class:`FreeRegions` maintains the free-core
+connected components *incrementally* across allocate/release:
+
+* ``allocate(nodes)`` removes cores and re-scans only the components they
+  belonged to (a removal can split a component);
+* ``release(nodes)`` adds cores and merges only the components adjacent to
+  them (an addition can only merge, never split).
+
+Components are immutable frozensets with a fresh id on every change, which
+makes them safe keys for lazy per-component *canonical signatures*
+(:func:`component_signature`).  A signature is a translation-normalized,
+attribute- and edge-exact description of a node set: two regions get the
+same key iff a coordinate translation maps one onto the other preserving
+node attributes (``abbr``, ``mem_dist`` — everything a match function may
+read) and edge attributes.  That key is what the TED cache is addressed
+by — see DESIGN.md "MappingEngine".
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+
+from ..topology import Topology
+
+
+def _attr_key(attrs: Dict) -> Tuple:
+    """Hashable, order-independent digest of a node/edge attribute dict."""
+    return tuple(sorted((k, v) for k, v in attrs.items()
+                        if isinstance(v, (str, int, float, bool))))
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSignature:
+    """Canonical form of a node set: a cache key plus the node order that
+    maps canonical indices back to concrete node ids."""
+    key: Tuple
+    order: Tuple[int, ...]
+
+    def index_of(self) -> Dict[int, int]:
+        return {n: i for i, n in enumerate(self.order)}
+
+
+def component_signature(topo: Topology, nodes: Iterable[int],
+                        adj: Dict[int, Sequence[int]]) -> RegionSignature:
+    """Canonical signature of ``nodes`` within ``topo``.
+
+    With coordinates, nodes are ordered by translation-normalized (row, col)
+    — so a region shifted anywhere on the mesh canonicalizes identically.
+    Without coordinates, node *id deltas* against the smallest id are used
+    (shift-by-base-id invariance, e.g. two rings at different base ids).
+    Edges are recorded in canonical-index space with their attribute digest,
+    so tori/rings cannot collide with open meshes of the same footprint.
+    """
+    node_list = sorted(int(n) for n in nodes)
+    coords = topo.coords
+    if coords and all(n in coords for n in node_list):
+        r0 = min(coords[n][0] for n in node_list)
+        c0 = min(coords[n][1] for n in node_list)
+        keyed = sorted(((coords[n][0] - r0, coords[n][1] - c0), n)
+                       for n in node_list)
+        order = tuple(n for _, n in keyed)
+        offsets = tuple(o for o, _ in keyed)
+        tag = "xy"
+    else:
+        base = node_list[0] if node_list else 0
+        order = tuple(node_list)
+        offsets = tuple(n - base for n in node_list)
+        tag = "raw"
+    index = {n: i for i, n in enumerate(order)}
+    attr_sig = tuple(_attr_key(topo.node_attrs[n]) for n in order)
+    node_set = set(node_list)
+    edges = []
+    for n in order:
+        for m in adj[n]:
+            if m in node_set and m > n:
+                a, b = index[n], index[m]
+                e = (a, b) if a <= b else (b, a)
+                edges.append((e, _attr_key(
+                    topo.edge_attrs[(n, m) if n <= m else (m, n)])))
+    key = (tag, len(order), offsets, attr_sig, tuple(sorted(edges)))
+    return RegionSignature(key=key, order=order)
+
+
+def scan_components(nodes: Iterable[int],
+                    adj: Dict[int, Sequence[int]]) -> List[FrozenSet[int]]:
+    """Connected components of ``nodes`` under ``adj``, smallest-id first."""
+    pending = set(nodes)
+    out: List[FrozenSet[int]] = []
+    while pending:
+        start = min(pending)
+        seen = {start}
+        q = deque([start])
+        while q:
+            cur = q.popleft()
+            for nb in adj[cur]:
+                if nb in pending and nb not in seen:
+                    seen.add(nb)
+                    q.append(nb)
+        pending -= seen
+        out.append(frozenset(seen))
+    return sorted(out, key=min)
+
+
+class FreeRegions:
+    """Free set + connected components, maintained incrementally."""
+
+    def __init__(self, topo: Topology, free: Optional[Iterable[int]] = None,
+                 adj: Optional[Dict[int, Tuple[int, ...]]] = None):
+        self.topo = topo
+        if adj is None:
+            adj = {n: tuple(sorted(ms)) for n, ms in topo._adj().items()}
+        self.adj = adj
+        self.ops = 0
+        self.reset(free)
+
+    # -- state -------------------------------------------------------------
+    def reset(self, free: Optional[Iterable[int]] = None) -> None:
+        self.free = (set(self.topo.node_attrs) if free is None
+                     else set(int(n) for n in free))
+        self._comps: Dict[int, FrozenSet[int]] = {}
+        self._comp_of: Dict[int, int] = {}
+        self._sigs: Dict[int, RegionSignature] = {}
+        self._next_id = 0
+        for comp in scan_components(self.free, self.adj):
+            self._install(comp)
+
+    def _install(self, nodes: FrozenSet[int]) -> int:
+        cid = self._next_id
+        self._next_id += 1
+        self._comps[cid] = nodes
+        for n in nodes:
+            self._comp_of[n] = cid
+        return cid
+
+    def _drop(self, cid: int) -> FrozenSet[int]:
+        nodes = self._comps.pop(cid)
+        for n in nodes:
+            if self._comp_of.get(n) == cid:
+                del self._comp_of[n]
+        self._sigs.pop(cid, None)
+        return nodes
+
+    # -- mutation ----------------------------------------------------------
+    def allocate(self, nodes: Iterable[int]) -> None:
+        """Cores leave the free set; affected components re-scan (split)."""
+        taken = set(int(n) for n in nodes) & self.free
+        if not taken:
+            return
+        affected = {self._comp_of[n] for n in taken}
+        self.free -= taken
+        for cid in affected:
+            remaining = self._drop(cid) - taken
+            for comp in scan_components(remaining, self.adj):
+                self._install(comp)
+        self.ops += 1
+
+    def release(self, nodes: Iterable[int]) -> None:
+        """Cores rejoin the free set; adjacent components merge."""
+        added = set(int(n) for n in nodes) - self.free
+        if not added:
+            return
+        self.free |= added
+        merged = set(added)
+        touch = {self._comp_of[m] for n in added for m in self.adj[n]
+                 if m in self._comp_of}
+        for cid in touch:
+            merged |= self._drop(cid)
+        for comp in scan_components(merged, self.adj):
+            self._install(comp)
+        self.ops += 1
+
+    # -- queries -----------------------------------------------------------
+    def components(self, min_size: int = 1) -> List[Tuple[int, FrozenSet[int]]]:
+        """(component id, nodes) pairs with at least ``min_size`` nodes,
+        ordered by smallest member (deterministic iteration order)."""
+        out = [(cid, c) for cid, c in self._comps.items()
+               if len(c) >= min_size]
+        out.sort(key=lambda item: min(item[1]))
+        return out
+
+    def component_of(self, node: int) -> Optional[FrozenSet[int]]:
+        cid = self._comp_of.get(node)
+        return self._comps.get(cid) if cid is not None else None
+
+    def signature(self, cid: int) -> RegionSignature:
+        sig = self._sigs.get(cid)
+        if sig is None:
+            sig = component_signature(self.topo, self._comps[cid], self.adj)
+            self._sigs[cid] = sig
+        return sig
+
+    def check_invariants(self) -> None:
+        """Test hook: components partition the free set and are connected."""
+        union = set()
+        for cid, comp in self._comps.items():
+            assert comp, f"empty component {cid}"
+            assert not (union & comp), "components overlap"
+            union |= comp
+            assert self.topo.is_connected(comp), f"component {cid} split"
+            for n in comp:
+                assert self._comp_of[n] == cid
+        assert union == self.free, "components != free set"

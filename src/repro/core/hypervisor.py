@@ -1,13 +1,20 @@
 """The vNPU hypervisor (§5.2): virtual-NPU lifecycle and meta-table owner.
 
 Manages, per virtual NPU:
-  * core allocation via topology mapping (exact -> similar -> optional
-    fragmented fallback),
+  * core allocation through the :class:`~repro.core.engine.MappingEngine`
+    (incremental free regions, cached minTopologyEditDistance, vectorized
+    candidate scoring; exact -> similar -> optional fragmented fallback),
   * the routing table (compact encoding when the allocation is a contiguous
     rectangle, dense otherwise) + confined-routing directions,
   * global-memory allocation through the buddy system, recorded as RTT
     ranges sorted by virtual address,
   * the per-tenant Access Counter bandwidth cap.
+
+The hypervisor is the engine's single writer: every lifecycle transition
+(create / destroy / remap / migrate) drives the engine's
+``notify_allocate`` / ``notify_release`` invalidation hooks, so the
+engine's incremental free-region view is always exactly the complement of
+the resident vNPUs' cores.
 
 The two comparison allocators used throughout §6 (``MIGPartitioner``,
 ``UVMAllocator``) live in :mod:`repro.core.baselines` and are re-exported
@@ -22,9 +29,9 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tup
 from .baselines import (AllocationError, MIGPartition, MIGPartitioner,
                         UVMAllocator)
 from .buddy import BuddyAllocator, OutOfMemory
-from .mapping import (MappingResult, min_topology_edit_distance,
-                      straightforward_mapping, mem_dist_node_match,
-                      NodeMatch, EdgeMatch)
+from .engine import MappingEngine
+from .mapping import (MappingResult, straightforward_mapping,
+                      mem_dist_node_match, NodeMatch, EdgeMatch)
 from .routing_table import (DenseRoutingTable, RoutingTable,
                             RoutingTableDirectory, make_routing_table)
 from .topology import Topology, mesh_2d
@@ -41,6 +48,8 @@ class VNPURequest:
     require_connected: bool = True
     confined_routing: bool = False
     strategy: str = "similar"             # similar | straightforward
+    mapper: Optional[str] = None          # engine strategy override
+                                          # (exact|hybrid|bipartite|rect)
 
 
 @dataclasses.dataclass
@@ -69,12 +78,33 @@ class Hypervisor:
     """CPU-side hypervisor + hyper-mode NPU controller state (§5)."""
 
     def __init__(self, phys_topo: Topology, hbm_bytes: int = 1 << 36,
-                 min_block: int = 1 << 20):
+                 min_block: int = 1 << 20,
+                 engine: Optional[MappingEngine] = None,
+                 mapper: Optional[str] = None):
         self.topo = phys_topo
         self.directory = RoutingTableDirectory()
         self.noc = NoCRouter(phys_topo)
         self.buddy = BuddyAllocator(hbm_bytes, min_block=min_block)
+        if engine is not None:
+            # an injected engine (e.g. with a pre-warmed TED cache) must
+            # describe this mesh and agree that nothing is allocated yet —
+            # the hypervisor is the engine's single writer from here on
+            if engine.topo is not phys_topo:
+                raise ValueError("injected MappingEngine is bound to a "
+                                 "different topology")
+            if engine.regions.free != set(phys_topo.node_attrs):
+                raise ValueError("injected MappingEngine already has cores "
+                                 "allocated; pass a fresh (or reset) engine")
+            if mapper is not None:       # don't silently drop the request
+                if mapper not in engine.mappers:
+                    raise KeyError(f"unknown mapper {mapper!r}; "
+                                   f"have {sorted(engine.mappers)}")
+                engine.default_mapper = mapper
+            self.engine = engine
+        else:
+            self.engine = MappingEngine(phys_topo, mapper=mapper or "hybrid")
         self.vnpus: Dict[int, VirtualNPU] = {}
+        self.quarantined: Set[int] = set()     # failed cores, never realloc'd
         self._next_vmid = 1
 
     # -- introspection -----------------------------------------------------
@@ -82,11 +112,61 @@ class Hypervisor:
         return {p for v in self.vnpus.values() for p in v.p_cores}
 
     def free_cores(self) -> Set[int]:
-        return set(self.topo.node_attrs) - self.allocated_cores()
+        # the engine's incrementally-maintained view IS the free set: every
+        # lifecycle transition drives its notify hooks, and the integration
+        # tests reconstruct the expected set from vnpus+quarantine to pin it
+        return set(self.engine.regions.free)
 
     def utilization(self) -> float:
-        total = self.topo.num_nodes
-        return len(self.allocated_cores()) / total if total else 0.0
+        # fraction of *healthy* capacity doing useful work: quarantined
+        # (dead) cores leave both sides — a dead core still held by a
+        # not-yet-migrated tenant is not useful work, and counting it would
+        # push utilization past 1.0
+        total = self.topo.num_nodes - len(self.quarantined)
+        useful = len(self.allocated_cores() - self.quarantined)
+        return useful / total if total else 0.0
+
+    # -- fault handling ------------------------------------------------------
+    def mark_failed(self, cores: Iterable[int]) -> None:
+        """Quarantine dead cores: they leave the allocatable pool for good.
+        A quarantined core that is currently owned by a vNPU stays out of
+        the pool when that tenant remaps away or is destroyed."""
+        new = (set(int(c) for c in cores) & set(self.topo.node_attrs)) \
+            - self.quarantined
+        if not new:
+            return
+        self.quarantined |= new
+        # pull currently-free dead cores out of the engine's free regions;
+        # allocated ones are withheld at release time instead
+        self.engine.notify_allocate(new & self.engine.regions.free)
+
+    # -- placement ----------------------------------------------------------
+    def _map_request(self, request: VNPURequest,
+                     node_match: Optional[NodeMatch],
+                     edge_match: Optional[EdgeMatch]
+                     ) -> Optional[MappingResult]:
+        if request.strategy == "straightforward":
+            return straightforward_mapping(
+                self.topo, self.allocated_cores() | self.quarantined,
+                request.topology)
+        # relaxed requests never need a straightforward fallback here: the
+        # engine's zig-zag relaxed path already covers every free>=k case
+        return self.engine.map_request(
+            request.topology, node_match=node_match, edge_match=edge_match,
+            require_connected=request.require_connected,
+            mapper=request.mapper)
+
+    def can_allocate(self, request: VNPURequest,
+                     node_match: Optional[NodeMatch] = None,
+                     edge_match: Optional[EdgeMatch] = None) -> bool:
+        """Side-effect-free feasibility probe.  The mapping computed here is
+        cached by the engine, so probe-then-allocate costs one solve."""
+        k = request.topology.num_nodes
+        if k > len(self.free_cores()):
+            return False
+        if request.strategy == "straightforward":
+            return True
+        return self._map_request(request, node_match, edge_match) is not None
 
     # -- lifecycle ----------------------------------------------------------
     def create_vnpu(self, request: VNPURequest,
@@ -98,17 +178,7 @@ class Hypervisor:
             raise AllocationError(
                 f"requested {k} cores, only {len(free)} free")
 
-        if request.strategy == "straightforward":
-            result = straightforward_mapping(self.topo, self.allocated_cores(),
-                                             request.topology)
-        else:
-            result = min_topology_edit_distance(
-                self.topo, self.allocated_cores(), request.topology,
-                node_match=node_match, edge_match=edge_match,
-                require_connected=request.require_connected)
-            if result is None and not request.require_connected:
-                result = straightforward_mapping(
-                    self.topo, self.allocated_cores(), request.topology)
+        result = self._map_request(request, node_match, edge_match)
         if result is None:
             raise AllocationError(
                 f"no candidate sub-topology of {k} cores "
@@ -154,6 +224,7 @@ class Hypervisor:
             ted=result.ted, exact=result.exact, mem_blocks=blocks)
         self.vnpus[vmid] = vnpu
         self.directory.install(rt)
+        self.engine.notify_allocate(result.nodes)
         return vnpu
 
     def destroy_vnpu(self, vmid: int) -> None:
@@ -163,6 +234,7 @@ class Hypervisor:
         self.directory.remove(vmid)
         for b in vnpu.mem_blocks:
             self.buddy.free_block(b)
+        self.engine.notify_release(set(vnpu.p_cores) - self.quarantined)
 
     def _phys_cols(self) -> Optional[int]:
         shape = self.topo.is_rect_mesh()
@@ -184,24 +256,43 @@ class Hypervisor:
 
     # -- elastic remap (fault tolerance; used by vmesh/elastic) -------------
     def remap_vnpu(self, vmid: int, failed_cores: Iterable[int],
-                   node_match: Optional[NodeMatch] = None) -> VirtualNPU:
+                   node_match: Optional[NodeMatch] = None, *,
+                   quarantine: bool = True) -> VirtualNPU:
         """Device failure path: re-run similar-topology mapping over the
         surviving free cores and re-install the routing table.  Memory (RTT)
         is preserved — HBM contents are re-loaded from checkpoint by the
         training runtime.
+
+        ``failed_cores`` are quarantined by default — they never rejoin the
+        allocatable pool (``mark_failed``).  The defragmentation path
+        (``migrate_vnpu``) passes ``quarantine=False``: its ``avoid`` set is
+        advisory, not dead hardware.
+
+        The tenant's own surviving cores count as free for the re-solve (it
+        vacates them) — expressed to the engine as a ``free_override``; the
+        canonical TED cache still applies, so a migration back into a
+        previously-seen region shape is a cache hit.
         """
         vnpu = self.vnpus[vmid]
         failed = set(failed_cores)
-        others = {p for v in self.vnpus.values() if v.vmid != vmid
-                  for p in v.p_cores}
-        blocked = others | failed
-        result = min_topology_edit_distance(
-            self.topo, blocked, vnpu.request.topology,
-            node_match=node_match,
-            require_connected=vnpu.request.require_connected)
+        if quarantine:
+            self.mark_failed(failed)
+        old_cores = set(vnpu.p_cores)
+        free_for_remap = ((self.free_cores() | old_cores) - failed
+                          - self.quarantined)
+        result = self.engine.map_request(
+            vnpu.request.topology, node_match=node_match,
+            require_connected=vnpu.request.require_connected,
+            mapper=vnpu.request.mapper, free_override=free_for_remap)
         if result is None:
             raise AllocationError(
                 f"cannot remap vmid={vmid}: no surviving sub-topology")
+        if result.nodes == vnpu.p_cores:
+            # same core set: the installed routing table still maps the
+            # request onto exactly these cores, so an assignment-only
+            # re-shuffle buys nothing — skip the rebuild/reinstall/region
+            # churn entirely and keep ``migrate_vnpu``'s moved=False honest
+            return vnpu
         rt = make_routing_table(vmid, dict(result.assignment),
                                 phys_cols=self._phys_cols(),
                                 phys_coords=self.topo.coords or None)
@@ -211,6 +302,8 @@ class Hypervisor:
         vnpu.ted = result.ted
         vnpu.exact = result.exact
         self.directory.install(rt)
+        self.engine.notify_release(old_cores - self.quarantined)
+        self.engine.notify_allocate(result.nodes)
         return vnpu
 
     # -- live migration (defragmentation; used by sched/cluster) ------------
@@ -231,7 +324,8 @@ class Hypervisor:
         old_cores = set(self.vnpus[vmid].p_cores)
         vnpu = self.remap_vnpu(
             vmid, failed_cores=avoid,
-            node_match=node_match or mem_dist_node_match(0.5))
+            node_match=node_match or mem_dist_node_match(0.5),
+            quarantine=False)
         return vnpu, set(vnpu.p_cores) != old_cores
 
 

@@ -55,6 +55,13 @@ def default_edge_match(e_req: Optional[Dict], e_cand: Optional[Dict]) -> float:
     return 0.0
 
 
+# ``match_id`` gives a match function a stable identity the MappingEngine's
+# TED cache can key on (and a vectorizable form where one exists); ad-hoc
+# callables without one are computed fresh on every request.
+default_node_match.match_id = "node:default"
+default_edge_match.match_id = "edge:default"
+
+
 def mem_dist_node_match(weight: float = 0.5) -> NodeMatch:
     """Heterogeneous node matching: extra penalty proportional to the
     difference in distance-to-memory-interface (§4.3 'Heterogeneous topology
@@ -66,6 +73,10 @@ def mem_dist_node_match(weight: float = 0.5) -> NodeMatch:
         c += weight * abs(a.get("mem_dist", 0) - b.get("mem_dist", 0))
         return c
 
+    match.match_id = f"node:mem_dist:{float(weight)!r}"
+    # vectorizable form for the engine's batched scorer: the weight travels
+    # as an attribute, not by re-parsing the match_id string
+    match.mem_dist_weight = float(weight)
     return match
 
 
@@ -78,6 +89,7 @@ def critical_edge_match(critical_cost: float = 4.0) -> EdgeMatch:
                 e_req.get("cost", DEFAULT_EDGE_COST))
         return default_edge_match(e_req, e_cand)
 
+    match.match_id = f"edge:critical:{float(critical_cost)!r}"
     return match
 
 

@@ -362,6 +362,14 @@ def _ring_flows(graph: WorkloadGraph, cores: Sequence[int],
             for a, b in zip(ring, ring[1:] + ring[:1])]
 
 
+def is_tensor_parallel(graph: "WorkloadGraph") -> bool:
+    """One predicate for the transformer/tensor-parallel execution model —
+    both the flow wiring (``tenant_flows``) and the dispatcher
+    (``simulate``) must agree on it, or the scheduler would inject ring
+    all-reduce flows for a tenant scored as a pipeline (or vice versa)."""
+    return graph.name.startswith(("gpt", "bert", "transformer"))
+
+
 def tenant_flows(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
                  hw: HWConfig, owner: int = 1) -> List[Flow]:
     """The NoC flows one tenant injects per iteration — what its co-residents
@@ -373,7 +381,7 @@ def tenant_flows(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
     n = len(cores)
     if n == 0:
         return []
-    if graph.name.startswith(("gpt", "bert", "transformer")):
+    if is_tensor_parallel(graph):
         return _ring_flows(graph, cores, owner)
     layer_core = partition_layers(graph, n,
                                   cost=lambda l: layer_compute_cycles(l, hw))
@@ -542,7 +550,7 @@ def simulate(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
              hw: HWConfig, **kw) -> RunReport:
     """Dispatch on workload style: transformers -> tensor-parallel, CNNs ->
     pipeline (how the paper's DCRA setup runs them)."""
-    if graph.name.startswith(("gpt", "bert", "transformer")):
+    if is_tensor_parallel(graph):
         kw.pop("weight_streaming", None)
         kw.pop("translation", None)
         kw.pop("tlb_entries", None)

@@ -107,10 +107,17 @@ class TenantMesh:
 def allocate_tenant(hyp: Hypervisor, dt: DeviceTopology,
                     topology: Topology,
                     axis_names: Tuple[str, ...] = ("data", "model"),
+                    node_match=None, edge_match=None,
                     **req_kwargs) -> TenantMesh:
-    """One-call tenant setup: topology mapping -> routing table -> JAX mesh."""
+    """One-call tenant setup: topology mapping -> routing table -> JAX mesh.
+
+    The mapping runs through the hypervisor's MappingEngine; pass
+    ``mapper="exact"|"hybrid"|"bipartite"|"rect"`` (a ``VNPURequest`` field)
+    to pick a speed/accuracy point, and ``node_match``/``edge_match`` for
+    heterogeneous or critical-edge-aware placement.
+    """
     req = VNPURequest(topology=topology, **req_kwargs)
-    vnpu = hyp.create_vnpu(req)
+    vnpu = hyp.create_vnpu(req, node_match=node_match, edge_match=edge_match)
     mesh = virtual_mesh(vnpu, dt, axis_names)
     return TenantMesh(vnpu=vnpu, mesh=mesh, dt=dt)
 
@@ -119,7 +126,8 @@ def elastic_remap(hyp: Hypervisor, dt: DeviceTopology, tenant: TenantMesh,
                   failed_nodes: Iterable[int],
                   axis_names: Optional[Tuple[str, ...]] = None) -> TenantMesh:
     """Failure path: re-run the similar-topology mapping excluding the failed
-    cores; returns a fresh TenantMesh on the surviving devices.
+    cores (which the hypervisor quarantines — they never rejoin the
+    allocatable pool); returns a fresh TenantMesh on the surviving devices.
 
     This is the paper's allocator doing double duty as the fault-tolerance
     mechanism — the 'closest legal submesh' is exactly what a 1000-node

@@ -1,0 +1,17 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` (<= 0.4.x / early 0.5.x) to
+``pltpu.CompilerParams`` (newer releases).  The kernels target the new
+name; this shim resolves whichever the installed jax provides.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` on any supported jax version."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -127,7 +127,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     from ..parallel import sharding as shd
     from ..roofline.analysis import (RooflineTerms, collective_bytes,
                                      collective_bytes_while_aware,
-                                     model_flops_for)
+                                     cost_analysis_dict, model_flops_for)
     from ..roofline.analytic import step_bytes, step_flops
     from ..train.optimizer import AdamWConfig
     from .mesh import make_production_mesh
@@ -170,7 +170,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile(
             compiler_options={"xla_backend_optimization_level": "0"})
         mem = compiled.memory_analysis()
-        full_cost = compiled.cost_analysis() or {}
+        full_cost = cost_analysis_dict(compiled)
         # collective accounting from the full module, while-loop aware
         coll_full = collective_bytes_while_aware(compiled.as_text())
 
@@ -183,7 +183,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 lc = _lower_step(_reduced_layers(cfg, L), shape, mesh,
                                  opt_cfg, recipe=recipe)
                 cc = lc.compile()
-                cost = cc.cost_analysis() or {}
+                cost = cost_analysis_dict(cc)
                 coll = collective_bytes(cc.as_text())
                 cal.append({"L": L,
                             "flops": float(cost.get("flops", 0.0)),

@@ -16,6 +16,20 @@ from typing import Optional, Tuple
 import jax
 
 
+def _make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...], devices):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer releases — 0.4.x takes
+    neither and defaults to the same Auto semantics."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes, devices=devices,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -27,8 +41,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
             "run under launch/dryrun.py (it forces 512 host devices)")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices[:n])
 
 
 def make_test_mesh(shape: Tuple[int, ...] = (2, 4),
@@ -40,5 +53,4 @@ def make_test_mesh(shape: Tuple[int, ...] = (2, 4),
     devices = jax.devices()
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices, have {len(devices)}")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices[:n])

@@ -1,3 +1,3 @@
 from .analysis import (RooflineTerms, collective_bytes,
-                       collective_bytes_while_aware, model_flops_for,
-                       PEAK_FLOPS, HBM_BW, ICI_BW)
+                       collective_bytes_while_aware, cost_analysis_dict,
+                       model_flops_for, PEAK_FLOPS, HBM_BW, ICI_BW)

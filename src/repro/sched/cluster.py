@@ -19,8 +19,9 @@ tenant trace:
   is hand-set.
 
 The output is a :class:`ClusterMetrics`: time-weighted mean utilization,
-queue-latency percentiles, per-tenant throughput and per-epoch trajectory
-samples (the paper's Figs. 15–18 axes under dynamic arrivals).
+queue-latency percentiles, per-tenant throughput, per-epoch trajectory
+samples (the paper's Figs. 15–18 axes under dynamic arrivals) and — for
+the vNPU policy — the MappingEngine's cache hit/miss telemetry.
 """
 from __future__ import annotations
 
@@ -76,6 +77,10 @@ class ClusterMetrics:
         default_factory=dict)
     tenant_active_s: Dict[int, float] = dataclasses.field(
         default_factory=dict)
+    # mapping-engine telemetry (vNPU policy only): cache hits/misses,
+    # candidates evaluated, region ops — see MappingEngine.counters()
+    engine_counters: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def mean_utilization(self) -> float:
@@ -102,7 +107,7 @@ class ClusterMetrics:
         return float(np.mean(rates)) if rates else 0.0
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "policy": self.policy,
             "trace": self.trace,
             "mean_utilization": round(self.mean_utilization, 4),
@@ -113,6 +118,9 @@ class ClusterMetrics:
             "migrations": self.n_migrations,
             "mean_tenant_fps": round(self.mean_tenant_fps, 2),
         }
+        if self.engine_counters:
+            out["engine"] = dict(self.engine_counters)
+        return out
 
 
 class ClusterScheduler:
@@ -275,6 +283,12 @@ class ClusterScheduler:
     # -- main loop ---------------------------------------------------------
     def run(self, trace: Sequence[TenantSpec],
             trace_name: str = "") -> ClusterMetrics:
+        if self._residents or self._waiting or self._last_t > 0.0:
+            raise RuntimeError(
+                "ClusterScheduler.run() is one-shot: the policy's placement "
+                "state survives a run, so reuse would mix tenants across "
+                "traces — build a fresh scheduler+policy per run (as "
+                "compare_policies does)")
         self.metrics = ClusterMetrics(policy=self.policy.name,
                                       trace=trace_name)
         evq = EventQueue()
@@ -332,6 +346,9 @@ class ClusterScheduler:
                                    spec.sla_wait_s))
         self._waiting = []
         self.metrics.horizon_s = self._last_t
+        counters = getattr(self.policy, "engine_counters", None)
+        if callable(counters):
+            self.metrics.engine_counters = counters()
         return self.metrics
 
 

@@ -98,6 +98,11 @@ class PlacementPolicy:
         """Best-effort move to a better spot.  Default: cannot move."""
         return placement, False
 
+    def mark_failed(self, cores: Sequence[int]) -> None:
+        """Dead hardware: quarantine the cores so nothing is placed on them
+        again.  Policies without that notion ignore the report; callers
+        should still ``migrate(placement, avoid=cores)`` affected tenants."""
+
     def utilization(self) -> float:
         raise NotImplementedError
 
@@ -122,23 +127,33 @@ class PlacementPolicy:
 
 
 class VNPUPolicy(PlacementPolicy):
-    """The paper's hypervisor behind the placement protocol."""
+    """The paper's hypervisor behind the placement protocol.
+
+    Placement runs through the hypervisor's
+    :class:`~repro.core.engine.MappingEngine`; ``mapper`` selects the
+    speed/accuracy strategy (hybrid default, or exact / bipartite / rect),
+    and ``engine_counters`` exposes the engine's cache hit/miss telemetry
+    to the scheduler metrics.
+    """
 
     name = "vnpu"
 
     def __init__(self, topo: Topology, hbm_bytes: int = 1 << 36,
                  hypervisor: Optional[Hypervisor] = None,
-                 require_connected: bool = False):
+                 require_connected: bool = False,
+                 mapper: Optional[str] = None):
         super().__init__(topo)
         self.hyp = hypervisor or Hypervisor(topo, hbm_bytes=hbm_bytes)
         self.require_connected = require_connected
+        self.mapper = mapper
 
     def _request(self, spec: TenantSpec, strict: bool) -> VNPURequest:
         return VNPURequest(
             topology=mesh_2d(*best_rect(spec.n_cores), base_id=10_000),
             memory_bytes=spec.memory_bytes,
             bandwidth_cap=spec.bandwidth_cap,
-            require_connected=strict or self.require_connected)
+            require_connected=strict or self.require_connected,
+            mapper=self.mapper)
 
     def allocate(self, spec: TenantSpec, strict: bool = False) -> Placement:
         vnpu = self.hyp.create_vnpu(self._request(spec, strict))
@@ -147,16 +162,19 @@ class VNPUPolicy(PlacementPolicy):
             comm="dataflow", handle=vnpu.vmid, vnpu=vnpu))
 
     def can_place(self, spec: TenantSpec, strict: bool = False) -> bool:
-        from ..core.mapping import min_topology_edit_distance
-
         if len(self.hyp.free_cores()) < spec.n_cores:
             return False
         if not (strict or self.require_connected):
             return True
-        result = min_topology_edit_distance(
-            self.topo, self.hyp.allocated_cores(),
-            self._request(spec, strict).topology, require_connected=True)
-        return result is not None
+        # probe through the engine — the solve is cached, so the allocate
+        # that typically follows a successful probe is a cache hit
+        return self.hyp.can_allocate(self._request(spec, strict))
+
+    def mark_failed(self, cores: Sequence[int]) -> None:
+        self.hyp.mark_failed(cores)
+
+    def engine_counters(self) -> Dict[str, float]:
+        return self.hyp.engine.counters()
 
     def release(self, placement: Placement) -> None:
         self.hyp.destroy_vnpu(placement.handle)

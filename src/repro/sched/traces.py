@@ -132,11 +132,26 @@ def poisson_trace(cfg: TraceConfig) -> List[TenantSpec]:
             u -= phase_len
         return cfg.rate_phases[-1][1]
 
+    def next_arrival(t: float) -> float:
+        if not cfg.rate_phases:
+            return t + float(rng.exponential(1.0 / max(cfg.rate_per_s, 1e-9)))
+        # inhomogeneous Poisson via thinning: drawing one gap at the
+        # current phase's rate would overrun phase boundaries (a gap drawn
+        # in a lull skips the start of the next burst); instead propose at
+        # the max phase rate and accept with probability rate(t)/max_rate
+        max_rate = max(r for _, r in cfg.rate_phases)
+        while True:
+            t += float(rng.exponential(1.0 / max(max_rate, 1e-9)))
+            if t >= cfg.horizon_s:
+                return t
+            if rng.random() * max_rate <= rate_at(t):
+                return t
+
     specs: List[TenantSpec] = []
     t = 0.0
     tid = 1
     while True:
-        t += float(rng.exponential(1.0 / max(rate_at(t), 1e-9)))
+        t = next_arrival(t)
         if t >= cfg.horizon_s:
             break
         entry = cfg.catalog[int(rng.choice(len(cfg.catalog), p=weights))]

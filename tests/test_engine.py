@@ -1,0 +1,410 @@
+"""MappingEngine: incremental free regions, canonical TED cache, vectorized
+candidate scoring, mapper strategies, hypervisor integration, pod scale."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests degrade, unit tests still run
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (Hypervisor, MappingEngine, VNPURequest, mesh_2d)
+from repro.core.engine import FreeRegions, component_signature
+from repro.core.engine.regions import scan_components
+from repro.core.mapping import (default_edge_match, default_node_match,
+                                induced_edit_cost, mem_dist_node_match,
+                                min_topology_edit_distance)
+from repro.core.topology import line
+
+
+# ---------------------------------------------------------------------------
+# incremental free regions
+# ---------------------------------------------------------------------------
+
+class TestFreeRegions:
+    @staticmethod
+    def _churn_check(seed):
+        """Random allocate/release churn: the incrementally-maintained
+        components must always equal a from-scratch scan of the free set."""
+        rng = np.random.default_rng(seed)
+        topo = mesh_2d(5, 5)
+        fr = FreeRegions(topo)
+        nodes = sorted(topo.node_attrs)
+        for _ in range(20):
+            subset = set(rng.choice(nodes, size=int(rng.integers(1, 7)),
+                                    replace=False).tolist())
+            if rng.random() < 0.5:
+                fr.allocate(subset)
+            else:
+                fr.release(subset)
+            fr.check_invariants()
+            scratch = scan_components(fr.free, fr.adj)
+            assert [c for _, c in fr.components()] == scratch
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_incremental_matches_scratch(self, seed):
+        self._churn_check(seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_incremental_matches_scratch_seeded(self, seed):
+        # deterministic variant that runs even without hypothesis
+        self._churn_check(seed)
+
+    def test_signature_translation_invariance(self):
+        topo = mesh_2d(4, 4)
+        adj = {n: tuple(ms) for n, ms in topo._adj().items()}
+        row0 = component_signature(topo, {0, 1, 2}, adj)
+        row1 = component_signature(topo, {4, 5, 6}, adj)   # same cols, row+1
+        assert row0.key == row1.key
+        assert row0.order == (0, 1, 2) and row1.order == (4, 5, 6)
+        # shifting by a column changes mem_dist — a match fn reads it, so
+        # the canonical key must separate
+        shifted = component_signature(topo, {1, 2, 3}, adj)
+        assert shifted.key != row0.key
+
+    def test_signature_separates_structure(self):
+        topo = mesh_2d(4, 4)
+        adj = {n: tuple(ms) for n, ms in topo._adj().items()}
+        path = component_signature(topo, {0, 1, 2, 3}, adj)
+        star = component_signature(topo, {5, 1, 4, 6}, adj)
+        assert path.key != star.key
+
+
+# ---------------------------------------------------------------------------
+# cache correctness (the PR-2 property test)
+# ---------------------------------------------------------------------------
+
+class TestCacheBitIdentical:
+    @staticmethod
+    def _churn_check(seed):
+        """Across a randomized allocate/release sequence, a (possibly
+        cached) engine answer must be bit-identical — nodes, TED and the
+        full assignment — to a cold engine solving the same free set."""
+        rng = np.random.default_rng(seed)
+        topo = mesh_2d(6, 6)
+        eng = MappingEngine(topo)
+        req = mesh_2d(2, 3, base_id=500)
+        residents = []
+        for _ in range(10):
+            if residents and rng.random() < 0.45:
+                eng.notify_release(residents.pop(
+                    int(rng.integers(len(residents)))))
+            else:
+                r = eng.map_request(req)
+                if r is not None:
+                    eng.notify_allocate(r.nodes)
+                    residents.append(r.nodes)
+            warm = eng.map_request(req)          # served from cache when hot
+            cold_engine = MappingEngine(topo)
+            cold_engine.reset(eng.regions.free)
+            cold = cold_engine.map_request(req)
+            if warm is None:
+                assert cold is None
+            else:
+                assert cold is not None
+                assert cold.ted == warm.ted
+                assert cold.nodes == warm.nodes
+                assert cold.assignment == warm.assignment
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=8, deadline=None)
+    def test_cached_equals_fresh_across_churn(self, seed):
+        self._churn_check(seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_cached_equals_fresh_seeded(self, seed):
+        # deterministic variant that runs even without hypothesis
+        self._churn_check(seed)
+
+    def test_repeat_query_is_cache_hit(self):
+        eng = MappingEngine(mesh_2d(6, 6))
+        req = mesh_2d(3, 3, base_id=100)
+        first = eng.map_request(req)
+        h0 = eng.stats.hits
+        second = eng.map_request(req)
+        assert eng.stats.hits == h0 + 1
+        assert second.nodes == first.nodes
+        assert second.assignment == first.assignment
+
+    def test_translated_region_hits_cache(self):
+        """The canonical (translation-normalized) key serves a request in a
+        region that is a shifted copy of an already-solved one.  mem_dist
+        depends on the column only, so two row bands at the same columns
+        are exact translations (attribute patterns included)."""
+        topo = mesh_2d(6, 4)
+        eng = MappingEngine(topo)
+        req = mesh_2d(2, 2, base_id=100)
+        # carve two identical 2x4 free bands: rows 0-1 and rows 3-4
+        wall = [n for n in topo.node_attrs if topo.coords[n][0] in (2, 5)]
+        eng.notify_allocate(wall)
+        r1 = eng.map_request(req)                      # solves band 1
+        assert all(topo.coords[n][0] <= 1 for n in r1.nodes)
+        band1 = [n for n in topo.node_attrs if topo.coords[n][0] <= 1]
+        eng.notify_allocate(band1)                     # band 2 remains
+        misses = eng.stats.misses
+        r2 = eng.map_request(req)
+        assert r2 is not None
+        assert eng.stats.misses == misses              # translated hit
+        assert all(3 <= topo.coords[n][0] <= 4 for n in r2.nodes)
+        assert r2.ted == r1.ted
+
+    def test_unregistered_match_fn_is_uncacheable_but_correct(self):
+        eng = MappingEngine(mesh_2d(5, 5))
+        req = mesh_2d(2, 2, base_id=100)
+        nm = lambda a, b: default_node_match(a, b)   # no match_id
+        r1 = eng.map_request(req, node_match=nm)
+        r2 = eng.map_request(req, node_match=nm)
+        assert eng.stats.hits == 0 and eng.stats.uncacheable >= 2
+        assert r1.nodes == r2.nodes and r1.ted == r2.ted
+
+
+# ---------------------------------------------------------------------------
+# quality vs the reference implementation
+# ---------------------------------------------------------------------------
+
+class TestEngineQuality:
+    def _engine_for(self, topo, blocked):
+        eng = MappingEngine(topo)
+        eng.notify_allocate(blocked)
+        return eng
+
+    @pytest.mark.parametrize("blocked,shape", [
+        (set(), (3, 3)),
+        ({0, 1, 6, 7, 28, 29, 34, 35}, (3, 4)),       # corners taken
+        ({0, 1, 2, 6, 7, 8, 12, 13, 14}, (3, 3)),     # 3x3 taken, ask again
+        ({1, 4, 9, 16, 21, 30}, (2, 4)),              # scattered
+    ])
+    def test_ted_equal_or_better_than_legacy_6x6(self, blocked, shape):
+        topo = mesh_2d(6, 6)
+        req = mesh_2d(*shape, base_id=100)
+        legacy = min_topology_edit_distance(topo, blocked, req)
+        got = self._engine_for(topo, blocked).map_request(req)
+        assert (got is None) == (legacy is None)
+        if got is not None:
+            assert got.ted <= legacy.ted + 1e-9
+
+    def test_returned_ted_is_true_induced_cost(self):
+        """The engine's TED must be the actual induced edit cost of the
+        assignment it returns (vectorized path == reference arithmetic)."""
+        topo = mesh_2d(6, 6)
+        req = mesh_2d(2, 3, base_id=100)
+        for blocked in (set(), {0, 1, 2, 6, 7, 8}, {7, 8, 9, 13, 14, 15}):
+            got = self._engine_for(topo, blocked).map_request(req)
+            sub = topo.subgraph(got.nodes)
+            ref = induced_edit_cost(req, sub, got.assignment,
+                                    default_node_match, default_edge_match)
+            assert got.ted == pytest.approx(ref)
+
+    def test_heterogeneous_mem_dist_objective(self):
+        topo = mesh_2d(4, 4, mem_interface_cols=(0,))
+        eng = MappingEngine(topo)
+        got = eng.map_request(mesh_2d(2, 2, base_id=100),
+                              node_match=mem_dist_node_match(0.5))
+        cols = {topo.coords[n][1] for n in got.nodes}
+        assert min(cols) == 0          # hugs the memory-interface column
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_relaxed_ted_equal_or_better_than_legacy(self, seed):
+        """The fragmented (require_connected=False) path the scheduler uses
+        must also never lose to the reference — the zig-zag fallback is
+        escalated (2-opt + exact B&B) just like a connected candidate."""
+        rng = np.random.default_rng(seed)
+        topo = mesh_2d(6, 6)
+        nodes = sorted(topo.node_attrs)
+        for _ in range(12):
+            n_blocked = int(rng.integers(12, 30))
+            blocked = set(rng.choice(nodes, size=n_blocked,
+                                     replace=False).tolist())
+            shape = [(2, 2), (2, 3), (2, 4)][int(rng.integers(3))]
+            if shape[0] * shape[1] > 36 - n_blocked:
+                continue
+            req = mesh_2d(*shape, base_id=100)
+            legacy = min_topology_edit_distance(
+                topo, blocked, req, require_connected=False)
+            got = self._engine_for(topo, blocked).map_request(
+                req, require_connected=False)
+            assert (got is None) == (legacy is None)
+            if got is not None:
+                assert got.ted <= legacy.ted + 1e-9
+
+    def test_fragmented_fallback_when_disconnected(self):
+        topo = mesh_2d(3, 3)
+        eng = MappingEngine(topo)
+        eng.notify_allocate({1, 4, 7})           # split into two columns
+        req = line(4, base_id=100)
+        assert eng.map_request(req) is None      # no connected 4-set
+        relaxed = eng.map_request(req, require_connected=False)
+        assert relaxed is not None and len(relaxed.nodes) == 4
+        assert relaxed.ted > 0
+
+
+# ---------------------------------------------------------------------------
+# mapper strategies
+# ---------------------------------------------------------------------------
+
+class TestMapperStrategies:
+    def test_all_strategies_produce_valid_mappings(self):
+        topo = mesh_2d(6, 6)
+        blocked = {0, 1, 6, 7, 28, 29, 34, 35}
+        req = mesh_2d(2, 3, base_id=100)
+        teds = {}
+        for name in ("exact", "hybrid", "bipartite", "rect"):
+            eng = MappingEngine(topo, mapper=name)
+            eng.notify_allocate(blocked)
+            got = eng.map_request(req)
+            assert got is not None
+            assert len(got.nodes) == 6
+            assert not (got.nodes & blocked)
+            assert topo.is_connected(got.nodes)
+            assert set(got.assignment.values()) == set(got.nodes)
+            teds[name] = got.ted
+        assert teds["exact"] <= teds["hybrid"] + 1e-9
+        assert teds["hybrid"] <= teds["bipartite"] + 1e-9
+        assert teds["hybrid"] <= teds["rect"] + 1e-9
+
+    def test_unknown_mapper_rejected(self):
+        with pytest.raises(KeyError):
+            MappingEngine(mesh_2d(3, 3), mapper="nope")
+        eng = MappingEngine(mesh_2d(3, 3))
+        with pytest.raises(KeyError):
+            eng.map_request(mesh_2d(2, 2, base_id=50), mapper="nope")
+
+
+# ---------------------------------------------------------------------------
+# hypervisor integration
+# ---------------------------------------------------------------------------
+
+def _expected_free(hyp):
+    """Ground truth reconstructed independently of the engine's tracker
+    (hyp.free_cores() is engine-derived, so the sync assertions must not
+    read it back)."""
+    used = {p for v in hyp.vnpus.values() for p in v.p_cores}
+    return set(hyp.topo.node_attrs) - used - hyp.quarantined
+
+
+class TestHypervisorIntegration:
+    def test_lifecycle_keeps_engine_in_sync(self):
+        rng = np.random.default_rng(7)
+        hyp = Hypervisor(mesh_2d(6, 6), hbm_bytes=1 << 32)
+        live = []
+        for _ in range(20):
+            if live and rng.random() < 0.4:
+                hyp.destroy_vnpu(live.pop(int(rng.integers(len(live)))))
+            else:
+                shape = [(2, 2), (2, 3), (3, 3)][int(rng.integers(3))]
+                try:
+                    v = hyp.create_vnpu(VNPURequest(
+                        topology=mesh_2d(*shape, base_id=100),
+                        require_connected=False))
+                    live.append(v.vmid)
+                except Exception:
+                    pass
+            assert hyp.engine.regions.free == _expected_free(hyp)
+            hyp.engine.regions.check_invariants()
+
+    def test_probe_then_allocate_is_cache_hit(self):
+        hyp = Hypervisor(mesh_2d(6, 6))
+        req = VNPURequest(topology=mesh_2d(3, 3, base_id=100))
+        assert hyp.can_allocate(req)
+        h0 = hyp.engine.stats.hits
+        hyp.create_vnpu(req)
+        assert hyp.engine.stats.hits > h0
+
+    def test_remap_keeps_engine_in_sync(self):
+        hyp = Hypervisor(mesh_2d(6, 6))
+        v = hyp.create_vnpu(VNPURequest(topology=mesh_2d(2, 2, base_id=100)))
+        dead = next(iter(v.p_cores))
+        v2 = hyp.remap_vnpu(v.vmid, [dead])
+        assert dead not in v2.p_cores
+        assert hyp.engine.regions.free == _expected_free(hyp)
+
+    def test_failed_core_never_reallocated(self):
+        """remap_vnpu quarantines dead cores: nothing may be placed on them
+        afterwards, across allocations, destroys and further remaps."""
+        hyp = Hypervisor(mesh_2d(4, 4))
+        v = hyp.create_vnpu(VNPURequest(topology=mesh_2d(2, 2, base_id=100)))
+        dead = next(iter(v.p_cores))
+        hyp.remap_vnpu(v.vmid, [dead])
+        assert dead in hyp.quarantined
+        assert dead not in hyp.free_cores()
+        assert dead not in hyp.engine.regions.free
+        placed = [hyp.create_vnpu(VNPURequest(
+            topology=mesh_2d(2, 2, base_id=200), require_connected=False))
+            for _ in range(2)]
+        assert all(dead not in p.p_cores for p in placed)
+        # the straightforward (zig-zag) strategy must honor quarantine too
+        zz = hyp.create_vnpu(VNPURequest(
+            topology=mesh_2d(1, 2, base_id=300), strategy="straightforward"))
+        assert dead not in zz.p_cores
+        hyp.destroy_vnpu(zz.vmid)
+        for p in placed:
+            hyp.destroy_vnpu(p.vmid)
+        # destroying the remapped tenant must not free the dead core either
+        hyp.destroy_vnpu(v.vmid)
+        assert dead not in hyp.free_cores()
+        assert hyp.engine.regions.free == _expected_free(hyp)
+
+    def test_utilization_bounded_with_quarantined_resident(self):
+        """Between mark_failed and the tenant's migration, the dead core is
+        both quarantined and owned — utilization must stay <= 1."""
+        hyp = Hypervisor(mesh_2d(2, 2))
+        v = hyp.create_vnpu(VNPURequest(topology=mesh_2d(2, 2, base_id=100)))
+        assert hyp.utilization() == 1.0
+        dead = next(iter(v.p_cores))
+        hyp.mark_failed([dead])
+        assert hyp.utilization() == 1.0          # 3 useful / 3 healthy
+        hyp.destroy_vnpu(v.vmid)
+        assert hyp.utilization() == 0.0
+
+    def test_defrag_migrate_does_not_quarantine(self):
+        hyp = Hypervisor(mesh_2d(6, 6))
+        v = hyp.create_vnpu(VNPURequest(topology=mesh_2d(2, 2, base_id=100)))
+        avoid = next(iter(v.p_cores))
+        hyp.migrate_vnpu(v.vmid, avoid=[avoid])
+        assert not hyp.quarantined          # advisory avoid, not dead HW
+        assert hyp.engine.regions.free == _expected_free(hyp)
+
+    def test_failed_memory_alloc_leaves_engine_untouched(self):
+        hyp = Hypervisor(mesh_2d(4, 4), hbm_bytes=1 << 26)
+        free0 = set(hyp.engine.regions.free)
+        with pytest.raises(Exception):
+            hyp.create_vnpu(VNPURequest(topology=mesh_2d(2, 2, base_id=100),
+                                        memory_bytes=1 << 30))
+        assert hyp.engine.regions.free == free0 == _expected_free(hyp)
+
+
+# ---------------------------------------------------------------------------
+# pod scale
+# ---------------------------------------------------------------------------
+
+class TestPodScale:
+    def test_propose_candidates_16x16(self):
+        eng = MappingEngine(mesh_2d(16, 16))
+        cands = eng.propose_candidates(9)
+        assert 0 < len(cands) <= eng.max_candidates
+        topo = eng.topo
+        for cand in cands[:50]:
+            assert len(set(cand)) == 9
+            assert topo.is_connected(cand)
+
+    def test_event_loop_smoke_16x16(self):
+        """The satellite smoke: the cluster event loop drives the engine's
+        candidate proposal on a 256-core mesh within a sane time budget."""
+        import time
+
+        from repro.sched import ClusterScheduler, make_policy, make_trace
+
+        policy = make_policy("vnpu", mesh_2d(16, 16))
+        trace = make_trace("mixed", horizon_s=25.0)
+        sched = ClusterScheduler(policy, epoch_s=5.0)
+        t0 = time.perf_counter()
+        metrics = sched.run(trace, trace_name="mixed-pod")
+        wall = time.perf_counter() - t0
+        assert metrics.n_admitted > 0
+        assert metrics.n_rejected == 0          # 256 cores swallow the mix
+        ec = metrics.engine_counters
+        assert ec and ec["map_calls"] > 0
+        # generous bound (CI machines vary); the real perf gate lives in
+        # benchmarks/mapping_engine.py --gate
+        assert wall < 120.0

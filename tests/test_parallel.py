@@ -188,7 +188,8 @@ ENTRY %main (p: f32[128]) -> f32[128] {
             c = jax.jit(step).lower(state, batch).compile()
         finally:
             set_scan_unroll(False)
-        xla = float(c.cost_analysis().get("flops", 0))
+        from repro.roofline import cost_analysis_dict
+        xla = float(cost_analysis_dict(c).get("flops", 0))
         assert xla > 0
         assert 0.5 < analytic / xla < 2.0
 

@@ -81,9 +81,10 @@ class TestRemapVNPU:
 
         v2 = hyp.remap_vnpu(v.vmid, [dead])
 
-        # old cores released: the dead core (and any vacated ones) are free
+        # old cores released; the dead one is quarantined, not freed
         assert dead not in v2.p_cores
         assert hyp.allocated_cores() == set(v2.p_cores)
+        assert dead in hyp.quarantined
         # routing table reinstalled: directory translates to the new cores
         for vcore, pcore in v2.assignment.items():
             assert hyp.directory.translate(v.vmid, vcore) == pcore
@@ -91,9 +92,10 @@ class TestRemapVNPU:
         # RTT preserved: global-memory contents survive the migration
         rtt_after = [(e.vaddr, e.paddr, e.size) for e in v2.rtt.entries]
         assert rtt_after == rtt_before
-        # a vacated old core can be reallocated
+        # vacated healthy cores can be reallocated; the dead one cannot
         free = hyp.free_cores()
-        assert old_cores - set(v2.p_cores) <= free
+        assert (old_cores - set(v2.p_cores)) - {dead} <= free
+        assert dead not in free
 
     def test_migrate_vnpu_compacts_or_stays(self):
         hyp = Hypervisor(mesh_2d(6, 6), hbm_bytes=1 << 32)
