@@ -1,17 +1,27 @@
 """Multi-tenant cluster simulation: vNPU vs MIG vs UVM over one trace.
 
 The dynamic counterpart of Figs. 15–18: tenants arrive (Poisson), queue,
-run, depart; each policy places them on the same 6x6 SIM-config mesh and
-the analytic simulator scores every epoch with cross-tenant interference
-wired from the actual co-residents.
+run, depart; each policy places them on the same mesh (6x6 SIM config by
+default, ``--mesh 16,16`` / ``--mesh 32,32`` for pods) and the analytic
+simulator scores every epoch with cross-tenant interference wired from the
+actual co-residents — incrementally via the InterferenceLedger by default,
+or with the O(residents^2 x flows) reference recompute (``--rescore
+oracle``).
 
 Run:
     PYTHONPATH=src python benchmarks/cluster_sim.py \\
         --trace mixed --policy vnpu,mig,uvm
 
-Reports per-policy mean utilization, p50/p95 tenant queueing latency,
-admission counts and mean per-tenant throughput, plus the headline claim
-(vNPU >= both baselines on utilization — the paper's Fig-15 trend).
+Reports per-policy mean utilization, p50/p95/p99 tenant queueing latency,
+admission counts, mean per-tenant throughput and the median epoch-scoring
+pass cost, plus the headline claim (vNPU >= both baselines on utilization
+— the paper's Fig-15 trend).
+
+CI gate (epoch-rescoring ledger):
+    PYTHONPATH=src python benchmarks/cluster_sim.py --gate
+replays the ``mixed`` and ``pod-mixed`` traces on a 16x16 mesh through the
+vNPU policy under both rescore modes and fails unless (a) the scores are
+bit-identical and (b) the ledger's median scoring pass is >= 5x cheaper.
 """
 from __future__ import annotations
 
@@ -25,14 +35,75 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import mesh_2d                       # noqa: E402
 from repro.core import simulator as S                # noqa: E402
-from repro.sched import (ClusterScheduler, make_policy,  # noqa: E402
+from repro.sched import (ClusterScheduler, TRACES, make_policy,  # noqa: E402
                          make_trace)
+
+GATE_MESH = (16, 16)
+GATE_SPEEDUP = 5.0        # ledger vs oracle median epoch-scoring pass cost
+GATE_TRACES = (("mixed", None), ("pod-mixed", 25.0))   # (name, horizon_s)
+
+
+def _trajectory(metrics):
+    """The score-bearing outputs two rescore modes must agree on exactly."""
+    return ([(s.t, s.agg_fps, s.utilization, s.n_resident, s.n_queued)
+             for s in metrics.samples],
+            dict(metrics.tenant_iterations))
+
+
+def run_gate(json_out: bool) -> int:
+    """Ledger-vs-oracle gate: bit-identical scores, >= 5x cheaper passes."""
+    report = {"mesh": list(GATE_MESH), "speedup_floor": GATE_SPEEDUP,
+              "traces": []}
+    ok = True
+    for trace_name, horizon in GATE_TRACES:
+        trace = make_trace(trace_name, horizon_s=horizon)
+        runs = {}
+        for mode in ("ledger", "oracle"):
+            policy = make_policy("vnpu", mesh_2d(*GATE_MESH))
+            sched = ClusterScheduler(policy, hw=S.SIM_CONFIG, epoch_s=2.0,
+                                     rescore=mode)
+            t0 = time.perf_counter()
+            metrics = sched.run(trace, trace_name=trace_name)
+            runs[mode] = (metrics, time.perf_counter() - t0)
+        ledger, oracle = runs["ledger"][0], runs["oracle"][0]
+        identical = _trajectory(ledger) == _trajectory(oracle)
+        speedup = oracle.median_scoring_ms / max(ledger.median_scoring_ms,
+                                                 1e-9)
+        entry = {
+            "trace": trace_name,
+            "tenants": len(trace),
+            "identical_scores": identical,
+            "ledger_median_scoring_ms": round(ledger.median_scoring_ms, 3),
+            "oracle_median_scoring_ms": round(oracle.median_scoring_ms, 3),
+            "ledger_scoring_passes": len(ledger.scoring_pass_s),
+            "oracle_scoring_passes": len(oracle.scoring_pass_s),
+            "median_pass_speedup": round(speedup, 1),
+            "ledger_wall_s": round(runs["ledger"][1], 1),
+            "oracle_wall_s": round(runs["oracle"][1], 1),
+            "ledger_counters": ledger.ledger_counters,
+            "gate_ok": identical and speedup >= GATE_SPEEDUP,
+        }
+        ok = ok and entry["gate_ok"]
+        report["traces"].append(entry)
+    report["gate_ok"] = ok
+    if json_out:
+        print(json.dumps(report, indent=2))
+    else:
+        for e in report["traces"]:
+            print(f"{e['trace']}: ledger {e['ledger_median_scoring_ms']}ms "
+                  f"vs oracle {e['oracle_median_scoring_ms']}ms per pass "
+                  f"-> {e['median_pass_speedup']}x "
+                  f"(floor {GATE_SPEEDUP}x), scores "
+                  f"{'bit-identical' if e['identical_scores'] else 'DIVERGED'}"
+                  f" over {e['tenants']} tenants "
+                  f"-> {'OK' if e['gate_ok'] else 'FAIL'}")
+    return 0 if ok else 1
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--trace", default="mixed",
-                    help="trace name: mixed|small|large|bursty")
+                    help="trace name: " + "|".join(sorted(TRACES)))
     ap.add_argument("--policy", default="vnpu,mig,uvm",
                     help="comma-separated: vnpu,mig,uvm")
     ap.add_argument("--seed", type=int, default=None)
@@ -41,10 +112,20 @@ def main(argv=None) -> int:
     ap.add_argument("--epoch", type=float, default=2.0,
                     help="scoring epoch in seconds")
     ap.add_argument("--mesh", default="6,6", help="physical mesh rows,cols")
+    ap.add_argument("--rescore", default="ledger",
+                    choices=("ledger", "oracle"),
+                    help="epoch scoring: incremental ledger (default) or "
+                         "the O(R^2 x flows) reference oracle")
     ap.add_argument("--no-defrag", action="store_true",
                     help="disable defragmenting migration")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI mode: ledger-vs-oracle scoring gate at 16x16 "
+                         "on the mixed and pod-mixed traces")
     ap.add_argument("--json", action="store_true", help="machine output")
     args = ap.parse_args(argv)
+
+    if args.gate:
+        return run_gate(args.json)
 
     try:
         rows, cols = (int(x) for x in args.mesh.split(","))
@@ -63,7 +144,8 @@ def main(argv=None) -> int:
         policy = make_policy(name, mesh_2d(rows, cols))
         sched = ClusterScheduler(policy, hw=S.SIM_CONFIG,
                                  epoch_s=args.epoch,
-                                 defrag=not args.no_defrag)
+                                 defrag=not args.no_defrag,
+                                 rescore=args.rescore)
         t0 = time.perf_counter()
         metrics = sched.run(trace, trace_name=args.trace)
         wall = time.perf_counter() - t0
@@ -89,24 +171,27 @@ def main(argv=None) -> int:
     if args.json:
         print(json.dumps({
             "trace": args.trace, "n_tenants": len(trace),
-            "mesh": [rows, cols],
+            "mesh": [rows, cols], "rescore": args.rescore,
             "policies": [m.summary() for m, _ in results],
             "claims": claims,
         }, indent=2))
         return 0 if ok else 1
 
     print(f"trace={args.trace} tenants={len(trace)} mesh={rows}x{cols} "
-          f"epoch={args.epoch}s defrag={not args.no_defrag}")
+          f"epoch={args.epoch}s defrag={not args.no_defrag} "
+          f"rescore={args.rescore}")
     hdr = (f"{'policy':>6} {'util':>7} {'p50_wait':>9} {'p95_wait':>9} "
-           f"{'admit':>6} {'reject':>7} {'migr':>5} {'fps/tenant':>11} "
-           f"{'wall_s':>7}")
+           f"{'p99_wait':>9} {'admit':>6} {'reject':>7} {'migr':>5} "
+           f"{'fps/tenant':>11} {'score_ms':>9} {'wall_s':>7}")
     print(hdr)
     for m, wall in results:
         s = m.summary()
         print(f"{s['policy']:>6} {s['mean_utilization']:>7.4f} "
               f"{s['p50_wait_s']:>8.2f}s {s['p95_wait_s']:>8.2f}s "
+              f"{s['p99_wait_s']:>8.2f}s "
               f"{s['admitted']:>6} {s['rejected']:>7} {s['migrations']:>5} "
-              f"{s['mean_tenant_fps']:>11.1f} {wall:>7.1f}")
+              f"{s['mean_tenant_fps']:>11.1f} "
+              f"{s['median_scoring_ms']:>9.3f} {wall:>7.1f}")
     print(f"claims: {json.dumps(claims)}")
 
     # mapping-engine telemetry (vNPU policy): cache effectiveness of the
@@ -123,6 +208,19 @@ def main(argv=None) -> int:
                   f"map_calls={ec['map_calls']} "
                   f"escalations={ec['exact_escalations']} "
                   f"region_ops={ec['region_ops']}")
+
+    # interference-ledger telemetry: how much epoch scoring the
+    # incremental occupancy bookkeeping avoided
+    for m, _ in results:
+        lc = m.ledger_counters
+        if lc:
+            print(f"{m.policy} interference ledger: "
+                  f"reuse_rate={lc['reuse_rate']:.2%} "
+                  f"(rescored={lc['rescored']} reused={lc['reused']}) "
+                  f"dirtied={lc['tenants_dirtied']} "
+                  f"global_invalidations={lc['global_invalidations']} "
+                  f"events={lc['adds']}+{lc['removes']}+{lc['updates']} "
+                  f"(add/remove/migrate)")
 
     # short trajectory excerpt: utilization over time per policy
     print("\ntrajectory (utilization @ epoch):")

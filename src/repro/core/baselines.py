@@ -32,6 +32,7 @@ class MIGPartition:
     cores: FrozenSet[int]
     topology: Topology
     occupied_by: Optional[int] = None
+    failed: bool = False          # a dead core poisons the whole partition
 
 
 class MIGPartitioner:
@@ -83,8 +84,10 @@ class MIGPartitioner:
     def allocate(self, n_cores: int) -> Tuple[MIGPartition, float]:
         """Returns (partition, time_share).  time_share < 1 when the request
         exceeds every free partition and physical cores must be TDM-shared.
+        Failed partitions are never handed out.
         """
-        free = [p for p in self.partitions if p.occupied_by is None]
+        free = [p for p in self.partitions
+                if p.occupied_by is None and not p.failed]
         if not free:
             raise AllocationError("no free MIG partition")
         fitting = [p for p in free if len(p.cores) >= n_cores]
@@ -109,24 +112,41 @@ class MIGPartitioner:
         """Fraction of the partition the tenant actually uses."""
         return min(1.0, n_cores / len(part.cores))
 
+    def mark_failed(self, cores: Iterable[int]) -> None:
+        """Dead hardware: the MIG model has no sub-partition granularity,
+        so a dead core poisons its whole partition — it is never handed
+        out again (a resident, if any, keeps its placement until the
+        caller migrates it off via a fresh ``allocate``)."""
+        dead = set(cores)
+        for p in self.partitions:
+            if dead & p.cores:
+                p.failed = True
+
     def utilization(self) -> float:
-        """Useful cores / total: an occupied partition contributes only the
-        cores its tenant asked for — the rest is internal fragmentation
-        (and TDM-shared partitions contribute at most the whole partition).
+        """Useful cores / healthy cores: an occupied partition contributes
+        only the cores its tenant asked for — the rest is internal
+        fragmentation (and TDM-shared partitions contribute at most the
+        whole partition).  Failed partitions leave both sides: their cores
+        are not capacity, and a tenant stranded on one contributes no
+        useful work.
         """
-        total = self.topo.num_nodes
-        if not total:
+        healthy = self.topo.num_nodes - sum(
+            len(p.cores) for p in self.partitions if p.failed)
+        if healthy <= 0:
             return 0.0
         useful = sum(min(req, len(self.partitions[pid].cores))
-                     for pid, req in self._tenants.values())
-        return useful / total
+                     for pid, req in self._tenants.values()
+                     if not self.partitions[pid].failed)
+        return useful / healthy
 
     def allocated_cores(self) -> Set[int]:
         return {c for p in self.partitions if p.occupied_by is not None
                 for c in p.cores}
 
     def free_cores(self) -> Set[int]:
-        return set(self.topo.node_attrs) - self.allocated_cores()
+        """Cores of unoccupied, healthy partitions."""
+        failed = {c for p in self.partitions if p.failed for c in p.cores}
+        return set(self.topo.node_attrs) - self.allocated_cores() - failed
 
 
 # ---------------------------------------------------------------------------
@@ -142,9 +162,12 @@ class UVMAllocator:
     def __init__(self, phys_topo: Topology):
         self.topo = phys_topo
         self.allocated: Set[int] = set()
+        self.quarantined: Set[int] = set()
 
     def allocate(self, n_cores: int) -> FrozenSet[int]:
-        free = sorted(set(self.topo.node_attrs) - self.allocated)
+        """Lowest-id ``n_cores`` free healthy cores (O(cores))."""
+        free = sorted(set(self.topo.node_attrs) - self.allocated
+                      - self.quarantined)
         if len(free) < n_cores:
             raise AllocationError("not enough free cores")
         pick = frozenset(free[:n_cores])
@@ -154,9 +177,18 @@ class UVMAllocator:
     def release(self, cores: Iterable[int]) -> None:
         self.allocated -= set(cores)
 
+    def mark_failed(self, cores: Iterable[int]) -> None:
+        """Dead hardware: the cores never rejoin the free pool (an owner,
+        if any, keeps them until released — migrate it off first)."""
+        self.quarantined |= set(cores)
+
     def utilization(self) -> float:
-        total = self.topo.num_nodes
-        return len(self.allocated) / total if total else 0.0
+        """Allocated healthy cores / healthy cores, in [0, 1] (quarantined
+        cores leave both sides, mirroring the hypervisor's accounting)."""
+        healthy = self.topo.num_nodes - len(self.quarantined)
+        if healthy <= 0:
+            return 0.0
+        return len(self.allocated - self.quarantined) / healthy
 
     def free_cores(self) -> Set[int]:
-        return set(self.topo.node_attrs) - self.allocated
+        return set(self.topo.node_attrs) - self.allocated - self.quarantined

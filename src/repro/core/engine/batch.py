@@ -52,10 +52,13 @@ class PoolArrays:
     vocab: Dict[str, int]
 
     def abbr_code(self, s: str) -> int:
+        """Intern a node ``abbr`` string into the shared integer vocab."""
         return self.vocab.setdefault(s, len(self.vocab))
 
 
 def make_pool_arrays(topo: Topology) -> PoolArrays:
+    """Precompute the dense per-topology arrays (O(N^2) memory, built once
+    per engine) that every batched scoring call gathers from."""
     ids = tuple(sorted(topo.node_attrs))
     index = {n: i for i, n in enumerate(ids)}
     n = len(ids)
@@ -106,6 +109,9 @@ class RequestSpec:
 
 def make_request_spec(pool: PoolArrays, t_req: Topology,
                       order: Sequence[int], em: EdgeMatch) -> RequestSpec:
+    """Lift the request topology into canonical-order arrays (O(k^2), once
+    per ``map_request``): adjacency, per-edge deletion costs under ``em``,
+    attribute codes shared with the pool vocab."""
     order = tuple(order)
     k = len(order)
     idx = {n: i for i, n in enumerate(order)}
@@ -189,6 +195,9 @@ def induced_batch(req_A: np.ndarray, req_W: np.ndarray, A: np.ndarray,
 
 @dataclasses.dataclass
 class PoolScore:
+    """One batch-scoring result: per-candidate costs/assignments plus the
+    gathered tensors the refinement passes reuse (costs are edit-distance
+    units — the same scale as ``MappingResult.ted``)."""
     cand_idx: np.ndarray       # (nc, k) indices into pool.ids
     costs: np.ndarray          # (nc,) induced edit cost of the LSA assignment
     perms: np.ndarray          # (nc, k)
@@ -201,6 +210,10 @@ class PoolScore:
 def score_pool(pool: PoolArrays, req: RequestSpec, cand_idx: np.ndarray,
                Wspur: np.ndarray, nm: NodeMatch,
                nm_id: Optional[str]) -> PoolScore:
+    """Score the whole candidate pool in one batched pass: Riesen–Bunke
+    bipartite assignment per candidate, then the exact induced edit cost
+    of each assignment.  O(nc x k^3) for the assignments + O(nc x k^2)
+    vectorized arithmetic — the hot path of every mapper."""
     A = pool.adj[cand_idx[:, :, None], cand_idx[:, None, :]]
     degc = A.sum(-1).astype(np.float64)
     Cnode = node_cost_tensor(pool, req, cand_idx, nm, nm_id)

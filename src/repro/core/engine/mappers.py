@@ -115,12 +115,14 @@ class Mapper:
     # -- shared plumbing ----------------------------------------------------
     def _candidates(self, ctx: MapContext,
                     comp: FrozenSet[int]) -> List[Tuple[int, ...]]:
+        """Bounded candidate pool (size-k node tuples) within ``comp``."""
         return component_candidates(ctx.topo, ctx.adj, comp,
                                     len(ctx.req.order),
                                     max_candidates=ctx.max_candidates)
 
     def _score(self, ctx: MapContext,
                cands: List[Tuple[int, ...]]) -> batch.PoolScore:
+        """Batch-score ``cands`` (see :func:`batch.score_pool`)."""
         idx = np.array([[ctx.pool.index[n] for n in cand] for cand in cands],
                        dtype=np.int64)
         return batch.score_pool(ctx.pool, ctx.req, idx, ctx.Wspur,
@@ -128,7 +130,7 @@ class Mapper:
 
 
 class BipartiteMapper(Mapper):
-    """Batched bipartite approximation, no escalation."""
+    """Batched bipartite approximation, no escalation.  O(pool x k^3)."""
 
     name = "bipartite"
     refine_top_k = 0
@@ -138,6 +140,8 @@ class BipartiteMapper(Mapper):
 
     def map_component(self, ctx: MapContext,
                       comp: FrozenSet[int]) -> Optional[MappingResult]:
+        """Best mapping of the request into ``comp`` (None when the
+        component cannot host it); TED in edit-cost units."""
         cands = self._candidates(ctx, comp)
         if not cands:
             return None
@@ -259,4 +263,6 @@ MAPPERS = {
 
 
 def make_mappers() -> Dict[str, Mapper]:
+    """Fresh strategy instances per engine (mappers are stateless today,
+    but per-engine instances keep any future state from leaking)."""
     return {name: cls() for name, cls in MAPPERS.items()}

@@ -239,15 +239,42 @@ def flow_paths(topo: Topology, flows: Sequence[Flow]) -> List[List[int]]:
             for f in flows]
 
 
+def flow_link_loads(topo: Topology, flows: Sequence[Flow]
+                    ) -> Dict[Tuple[int, int], float]:
+    """Aggregate per-directed-link byte loads (bytes/iteration) of a flow
+    set — the unit the scheduler's
+    :class:`~repro.sched.ledger.InterferenceLedger` adds and subtracts per
+    tenant.  O(flows x path length).
+
+    Loads are float-typed but always integer-valued (``Flow.bytes_per_iter``
+    is an int and sums stay far below 2**53), so aggregation is exact and
+    order-independent: summing per-tenant footprints and summing a flat
+    flow list produce bit-identical link loads.
+    """
+    loads: Dict[Tuple[int, int], float] = {}
+    for path, f in zip(flow_paths(topo, flows), flows):
+        for e in zip(path, path[1:]):
+            loads[e] = loads.get(e, 0.0) + f.bytes_per_iter
+    # a zero load is indistinguishable from an absent link in every
+    # consumer (max-over-path, add, subtract) — prune for clean bookkeeping
+    return {e: v for e, v in loads.items() if v}
+
+
 def link_contention(paths: Sequence[Sequence[int]],
-                    flows: Sequence[Flow]) -> List[float]:
+                    flows: Sequence[Flow],
+                    external_loads: Optional[Dict[Tuple[int, int], float]]
+                    = None) -> List[float]:
     """Per-flow slowdown: bytes on its busiest link / its own bytes (>=1).
 
     Links are full-duplex: the (a, b) and (b, a) directions carry
     independent bandwidth, so opposing flows do not contend — loads are
-    keyed by *directed* edge.
+    keyed by *directed* edge.  ``external_loads`` seeds the link loads with
+    pre-aggregated co-tenant traffic (see :func:`flow_link_loads`) — exactly
+    equivalent to, and cheaper than, listing every external flow in
+    ``flows``.  O(flows x path length).
     """
-    loads: Dict[Tuple[int, int], float] = {}
+    loads: Dict[Tuple[int, int], float] = (
+        dict(external_loads) if external_loads else {})
     for path, f in zip(paths, flows):
         for e in zip(path, path[1:]):
             loads[e] = loads.get(e, 0.0) + f.bytes_per_iter
@@ -400,11 +427,21 @@ def simulate_pipeline(
     tlb_entries: int = 4,
     weight_streaming: bool = False,
     external_flows: Sequence[Flow] = (),
+    external_link_loads: Optional[Dict[Tuple[int, int], float]] = None,
     hbm_concurrency: int = 1,            # concurrent HBM clients (UVM contention)
     tdm_physical: Optional[int] = None,  # MIG: physical cores < virtual cores
     virtualization_overhead: float = 0.0,
 ) -> RunReport:
-    """Layer-pipelined execution (CNN style; Figs. 16/18)."""
+    """Layer-pipelined execution (CNN style; Figs. 16/18).
+
+    Cross-tenant NoC interference enters either as ``external_flows`` (the
+    co-residents' flow list, re-pathed here: O(total flows)) or as
+    ``external_link_loads`` (their pre-aggregated per-directed-link loads
+    from :func:`flow_link_loads`: O(own flows) — the scheduler's ledger
+    path).  The two are bit-identical because link loads are exact integer
+    sums; external flows only ever influence the result through the loads
+    on this tenant's own links.
+    """
     n = len(cores)
     layer_core = partition_layers(graph, n,
                                   cost=lambda l: layer_compute_cycles(l, hw))
@@ -417,9 +454,14 @@ def simulate_pipeline(
         wbytes[layer_core[i]] += layer.weight_bytes
 
     flows = _stage_flows(graph, layer_core, core_of_stage, owner)
-    all_flows = list(flows) + list(external_flows)
-    paths = flow_paths(topo, all_flows)
-    factors = link_contention(paths, all_flows)
+    if external_link_loads is not None:
+        paths = flow_paths(topo, flows)
+        factors = link_contention(paths, flows,
+                                  external_loads=external_link_loads)
+    else:
+        all_flows = list(flows) + list(external_flows)
+        paths = flow_paths(topo, all_flows)
+        factors = link_contention(paths, all_flows)
 
     comm_in: Dict[int, int] = {c: 0 for c in core_of_stage}
     comm_out: Dict[int, int] = {c: 0 for c in core_of_stage}
@@ -484,6 +526,7 @@ def simulate_tensor_parallel(
     virtualization_overhead: float = 0.0,
     overlap: float = 0.7,          # fraction of NoC all-reduce hidden by compute
     external_flows: Sequence[Flow] = (),
+    external_link_loads: Optional[Dict[Tuple[int, int], float]] = None,
 ) -> RunReport:
     """Tensor-partitioned execution (transformers; §6.3's LLM workloads).
 
@@ -492,7 +535,13 @@ def simulate_tensor_parallel(
     runs ring-style on the NoC and mostly overlaps with compute; under
     ``uvm`` each reduction bounces through shared global memory and
     serializes (§6.3.1's contention argument).  ``external_flows`` — other
-    tenants' NoC traffic — slow the ring by the contention on its links.
+    tenants' NoC traffic — slow the ring by the contention on its links;
+    ``external_link_loads`` is the pre-aggregated equivalent (see
+    :func:`flow_link_loads`).  Callers must pass ``external_link_loads``
+    (even an empty dict) exactly when they would have passed a non-empty
+    ``external_flows`` list: the contention term — which includes the
+    ring's *self*-contention — is only computed when co-tenant traffic
+    exists, so the two paths stay bit-identical.
     """
     n = len(cores)
     comp = sum(layer_compute_cycles(l, hw, cores=n) for l in graph.layers)
@@ -500,11 +549,17 @@ def simulate_tensor_parallel(
 
     # cross-tenant contention on the ring links
     contention = 1.0
-    if comm != "uvm" and external_flows:
+    if comm != "uvm" and (external_flows or external_link_loads is not None):
         ring = _ring_flows(graph, cores, owner)
         if ring:
-            all_flows = ring + list(external_flows)
-            factors = link_contention(flow_paths(topo, all_flows), all_flows)
+            if external_link_loads is not None:
+                factors = link_contention(
+                    flow_paths(topo, ring), ring,
+                    external_loads=external_link_loads)
+            else:
+                all_flows = ring + list(external_flows)
+                factors = link_contention(flow_paths(topo, all_flows),
+                                          all_flows)
             contention = sum(factors[: len(ring)]) / len(ring)
 
     ar_cycles = 0

@@ -12,21 +12,36 @@ tenant trace:
   consolidate free cores before falling back to a fragmented placement;
   each move is charged the warmup/RTT-model pause (scratchpad re-warm +
   routing-table reconfig);
+* **failure injection** — ``run(..., failures=...)`` kills physical cores
+  mid-trace: the policy quarantines them (`mark_failed`) and every resident
+  touching a dead core is live-migrated away, charged like a defrag move;
 * **epoch scoring** — between events the resident set is scored with
-  :mod:`repro.core.simulator`; a tenant's ``external_flows`` are the NoC
-  flows its *actual co-residents* inject, and ``hbm_concurrency`` is the
-  number of resident tenants synchronizing through global memory — nothing
-  is hand-set.
+  :mod:`repro.core.simulator`; a tenant's cross-tenant interference is the
+  NoC traffic its *actual co-residents* inject and the number of resident
+  HBM clients — nothing is hand-set.
+
+Scoring has two implementations, selected by ``rescore=``:
+
+* ``"ledger"`` (default) — the :class:`~repro.sched.ledger.InterferenceLedger`
+  maintains per-directed-link occupancy incrementally across
+  allocate/release/migrate/fail and re-simulates only the tenants whose
+  links' occupancy (or HBM context) actually changed: O(dirty x own flows)
+  per pass.
+* ``"oracle"`` — the reference recompute: every resident re-lists and
+  re-paths every co-resident's flows, O(residents^2 x flows) per pass.
+  Kept as the ground truth; ``benchmarks/cluster_sim.py --gate`` pins the
+  ledger bit-identical to it and >= 5x cheaper at 16x16.
 
 The output is a :class:`ClusterMetrics`: time-weighted mean utilization,
-queue-latency percentiles, per-tenant throughput, per-epoch trajectory
-samples (the paper's Figs. 15–18 axes under dynamic arrivals) and — for
-the vNPU policy — the MappingEngine's cache hit/miss telemetry.
+queue-latency percentiles (p50/p95/p99), per-tenant throughput, per-epoch
+trajectory samples (the paper's Figs. 15–18 axes under dynamic arrivals),
+scoring-pass costs, and — for the vNPU policy — the MappingEngine's cache
+telemetry next to the ledger's hit/recompute counters.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -35,13 +50,19 @@ from ..core import simulator as S
 from ..core.baselines import AllocationError
 from ..core.simulator import Flow, HWConfig, RunReport
 from ..core.workloads import WorkloadGraph
-from .events import ARRIVAL, DEPARTURE, EPOCH, EventQueue, TenantSpec
+from .events import (ARRIVAL, DEPARTURE, EPOCH, FAILURE, EventQueue,
+                     TenantSpec)
+from .ledger import InterferenceLedger
 from .policy import Placement, PlacementPolicy
 from .traces import get_serving_workload
+
+RESCORE_MODES = ("ledger", "oracle")
 
 
 @dataclasses.dataclass
 class ResidentTenant:
+    """A placed tenant's run state.  Times are wall-clock seconds;
+    ``served_iterations`` integrates fps x active time."""
     spec: TenantSpec
     placement: Placement
     graph: WorkloadGraph
@@ -54,8 +75,9 @@ class ResidentTenant:
 
 @dataclasses.dataclass
 class EpochSample:
-    t: float
-    utilization: float
+    """One trajectory point (taken at every epoch event)."""
+    t: float                           # seconds
+    utilization: float                 # fraction of useful physical cores
     n_resident: int
     n_queued: int
     agg_fps: float                     # sum of effective per-tenant fps
@@ -63,30 +85,49 @@ class EpochSample:
 
 @dataclasses.dataclass
 class ClusterMetrics:
+    """Everything one scheduler run reports.
+
+    Units: waits and the horizon are seconds; fps is iterations/second at
+    ``HWConfig.freq_hz``; ``scoring_pass_s`` holds the wall-time of each
+    epoch-scoring pass (the quantity the ledger tentpole optimizes).
+    """
     policy: str
     trace: str = ""
+    rescore_mode: str = "ledger"
     samples: List[EpochSample] = dataclasses.field(default_factory=list)
     queue_waits_s: List[float] = dataclasses.field(default_factory=list)
     n_arrived: int = 0
     n_admitted: int = 0
     n_rejected: int = 0
     n_migrations: int = 0
+    n_failed_cores: int = 0
     util_integral: float = 0.0        # ∫ utilization dt
     horizon_s: float = 0.0
     tenant_iterations: Dict[int, float] = dataclasses.field(
         default_factory=dict)
     tenant_active_s: Dict[int, float] = dataclasses.field(
         default_factory=dict)
+    # wall-time of every scoring pass (oracle: full recompute; ledger:
+    # dirty-set re-simulation) — cluster_sim's --gate compares the medians
+    scoring_pass_s: List[float] = dataclasses.field(default_factory=list)
     # mapping-engine telemetry (vNPU policy only): cache hits/misses,
     # candidates evaluated, region ops — see MappingEngine.counters()
     engine_counters: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # interference-ledger telemetry (rescore="ledger" only): tenants
+    # rescored vs reused, dirty marks, global invalidations — see
+    # LedgerCounters.as_dict()
+    ledger_counters: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def mean_utilization(self) -> float:
+        """Time-weighted mean fraction of useful cores (dimensionless)."""
         return self.util_integral / self.horizon_s if self.horizon_s else 0.0
 
     def wait_percentile(self, q: float) -> float:
+        """q-th percentile of admission waits in seconds (rejected tenants
+        are censored in at the wait they endured)."""
         if not self.queue_waits_s:
             return 0.0
         return float(np.percentile(np.array(self.queue_waits_s), q))
@@ -100,6 +141,17 @@ class ClusterMetrics:
         return self.wait_percentile(95)
 
     @property
+    def p99_wait_s(self) -> float:
+        return self.wait_percentile(99)
+
+    @property
+    def median_scoring_ms(self) -> float:
+        """Median wall-time of one epoch-scoring pass, in milliseconds."""
+        if not self.scoring_pass_s:
+            return 0.0
+        return float(np.median(np.array(self.scoring_pass_s))) * 1e3
+
+    @property
     def mean_tenant_fps(self) -> float:
         rates = [it / act for it, act in
                  ((self.tenant_iterations[t], self.tenant_active_s[t])
@@ -107,47 +159,71 @@ class ClusterMetrics:
         return float(np.mean(rates)) if rates else 0.0
 
     def summary(self) -> Dict[str, float]:
+        """Flat scalar digest (what ``cluster_sim.py`` prints/serializes)."""
         out = {
             "policy": self.policy,
             "trace": self.trace,
+            "rescore": self.rescore_mode,
             "mean_utilization": round(self.mean_utilization, 4),
             "p50_wait_s": round(self.p50_wait_s, 3),
             "p95_wait_s": round(self.p95_wait_s, 3),
+            "p99_wait_s": round(self.p99_wait_s, 3),
             "admitted": self.n_admitted,
             "rejected": self.n_rejected,
             "migrations": self.n_migrations,
             "mean_tenant_fps": round(self.mean_tenant_fps, 2),
+            "median_scoring_ms": round(self.median_scoring_ms, 3),
         }
+        if self.n_failed_cores:
+            out["failed_cores"] = self.n_failed_cores
         if self.engine_counters:
             out["engine"] = dict(self.engine_counters)
+        if self.ledger_counters:
+            out["ledger"] = dict(self.ledger_counters)
         return out
 
 
 class ClusterScheduler:
-    """Event loop binding a placement policy to the analytic simulator."""
+    """Event loop binding a placement policy to the analytic simulator.
+
+    ``rescore`` selects the epoch-scoring implementation: ``"ledger"``
+    (incremental, the default) or ``"oracle"`` (the O(residents^2 x flows)
+    reference recompute) — scores are bit-identical either way.
+    """
 
     def __init__(self, policy: PlacementPolicy,
                  hw: Optional[HWConfig] = None,
                  epoch_s: float = 2.0,
                  defrag: bool = True,
-                 max_migrations_per_event: int = 2):
+                 max_migrations_per_event: int = 2,
+                 rescore: str = "ledger"):
+        if rescore not in RESCORE_MODES:
+            raise ValueError(
+                f"rescore must be one of {RESCORE_MODES}, got {rescore!r}")
         self.policy = policy
         self.hw = hw or S.SIM_CONFIG
         self.topo = policy.topo
         self.epoch_s = epoch_s
         self.defrag = defrag
         self.max_migrations_per_event = max_migrations_per_event
+        self.rescore_mode = rescore
+        self.ledger: Optional[InterferenceLedger] = (
+            InterferenceLedger(self.topo) if rescore == "ledger" else None)
 
         self._residents: Dict[int, ResidentTenant] = {}
+        self._failed_cores: set = set()
         self._waiting: List[Tuple[TenantSpec, float]] = []
         self._scores: Dict[int, RunReport] = {}
         self._flows: Dict[int, List[Flow]] = {}
-        self._dirty = True
+        self._dirty = True                # oracle-mode recompute flag
         self._last_t = 0.0
-        self.metrics = ClusterMetrics(policy=policy.name)
+        self.metrics = ClusterMetrics(policy=policy.name,
+                                      rescore_mode=rescore)
 
     # -- scoring -----------------------------------------------------------
     def _tenant_flows(self, rt: ResidentTenant) -> List[Flow]:
+        """The NoC flows this tenant injects per iteration (cached until
+        the placement changes).  O(workload layers) on a miss."""
         flows = self._flows.get(rt.spec.tid)
         if flows is None:
             if rt.placement.comm == "dataflow":
@@ -159,32 +235,102 @@ class ClusterScheduler:
             self._flows[rt.spec.tid] = flows
         return flows
 
+    def _score_tenant(self, rt: ResidentTenant,
+                      hbm_clients: int) -> RunReport:
+        """One simulator call for one resident.  The interference context
+        comes either from the ledger (pre-aggregated per-link loads,
+        O(own flows)) or — oracle mode — from re-listing every
+        co-resident's flows (O(residents x flows))."""
+        p = rt.placement
+        tid = rt.spec.tid
+        kwargs = dict(comm=p.comm, owner=tid,
+                      tdm_physical=p.tdm_physical,
+                      hbm_concurrency=max(hbm_clients, 1))
+        if p.comm == "dataflow":
+            if self.ledger is None:
+                kwargs["external_flows"] = [
+                    f for other, r2 in self._residents.items()
+                    if other != tid for f in self._tenant_flows(r2)]
+            elif self.ledger.has_external(tid):
+                # pass the (possibly empty) aggregate exactly when the
+                # oracle's flow list would be non-empty — the tensor
+                # model's contention switch keys on that, not on loads
+                kwargs["external_link_loads"] = \
+                    self.ledger.external_loads(tid)
+        return S.simulate(rt.graph, list(p.cores), self.topo, self.hw,
+                          **kwargs)
+
     def _rescore(self) -> None:
-        """Score every resident against its actual co-residents."""
+        """Reference oracle: score every resident against every other —
+        O(residents^2 x flows) per pass."""
         hbm_clients = sum(1 for r in self._residents.values()
                           if r.placement.hbm_client)
-        self._scores = {}
-        for tid, rt in self._residents.items():
-            p = rt.placement
-            kwargs = dict(comm=p.comm, owner=tid,
-                          tdm_physical=p.tdm_physical,
-                          hbm_concurrency=max(hbm_clients, 1))
-            if p.comm == "dataflow":
-                external = [f for other, r2 in self._residents.items()
-                            if other != tid for f in self._tenant_flows(r2)]
-                kwargs["external_flows"] = external
-            self._scores[tid] = S.simulate(
-                rt.graph, list(p.cores), self.topo, self.hw, **kwargs)
+        self._scores = {tid: self._score_tenant(rt, hbm_clients)
+                        for tid, rt in self._residents.items()}
         self._dirty = False
 
-    def _fps(self, tid: int) -> float:
-        if self._dirty:
+    def _rescore_dirty(self) -> None:
+        """Ledger path: re-simulate only the tenants whose interference
+        context changed — O(dirty x own flows) per pass."""
+        led = self.ledger
+        live = [t for t in led.take_dirty() if t in self._residents]
+        for tid in live:
+            self._scores[tid] = self._score_tenant(
+                self._residents[tid], led.hbm_clients)
+        led.counters.rescored += len(live)
+        led.counters.reused += len(self._residents) - len(live)
+
+    def _ensure_scores(self) -> None:
+        """Bring ``_scores`` up to date, timing the pass for the metrics."""
+        if self.ledger is None:
+            if not self._dirty:
+                return
+            t0 = time.perf_counter()
             self._rescore()
+        else:
+            if not self.ledger.dirty:
+                return
+            t0 = time.perf_counter()
+            self._rescore_dirty()
+        self.metrics.scoring_pass_s.append(time.perf_counter() - t0)
+
+    def _fps(self, tid: int) -> float:
+        """Current effective throughput of a resident (iterations/s)."""
+        self._ensure_scores()
         report = self._scores.get(tid)
         return report.fps if report else 0.0
 
+    # -- lifecycle hooks (ledger/oracle invalidation) ----------------------
+    def _tenant_admitted(self, rt: ResidentTenant) -> None:
+        if self.ledger is not None:
+            self.ledger.add(rt.spec.tid, self._tenant_flows(rt),
+                            hbm_client=rt.placement.hbm_client)
+        else:
+            self._dirty = True
+
+    def _tenant_departed(self, tid: int) -> None:
+        self._flows.pop(tid, None)
+        self._scores.pop(tid, None)
+        if self.ledger is not None:
+            self.ledger.remove(tid)
+        else:
+            self._dirty = True
+
+    def _tenant_moved(self, rt: ResidentTenant) -> None:
+        """Placement changed in place (defrag / failure migration): refresh
+        the flow cache and swap the ledger footprint."""
+        self._flows.pop(rt.spec.tid, None)
+        if self.ledger is not None:
+            self.ledger.update(rt.spec.tid, self._tenant_flows(rt),
+                               hbm_client=rt.placement.hbm_client)
+        else:
+            self._dirty = True
+
     # -- time accounting ---------------------------------------------------
     def _advance(self, now: float) -> None:
+        """Integrate utilization and per-tenant served iterations from the
+        last event to ``now`` (seconds).  O(residents) plus at most one
+        scoring pass."""
         dt = now - self._last_t
         if dt <= 0:
             return
@@ -200,6 +346,9 @@ class ClusterScheduler:
     # -- admission ---------------------------------------------------------
     def _try_place(self, spec: TenantSpec, now: float,
                    evq: EventQueue, strict: bool = False) -> bool:
+        """Attempt one placement through the policy (the MappingEngine, for
+        vNPU); on success the tenant becomes resident and its departure is
+        scheduled.  Returns False when the policy cannot place it."""
         try:
             placement = self.policy.allocate(spec, strict=strict)
         except AllocationError:
@@ -209,16 +358,30 @@ class ClusterScheduler:
             graph=get_serving_workload(spec.model),
             admit_s=now, depart_s=now + spec.duration_s)
         self._residents[spec.tid] = rt
-        self._dirty = True
+        self._tenant_admitted(rt)
         evq.push(rt.depart_s, DEPARTURE, tid=spec.tid)
         self.metrics.n_admitted += 1
         self.metrics.queue_waits_s.append(now - spec.arrival_s)
         return True
 
+    def _charge_migration(self, rt: ResidentTenant, now: float) -> None:
+        """Book one live migration: count it and pause the tenant for the
+        scratchpad re-warm + routing-table reconfig (cycles -> seconds at
+        ``hw.freq_hz``)."""
+        rt.migrations += 1
+        self.metrics.n_migrations += 1
+        pause_cycles = self.policy.migration_cycles(
+            rt.placement, rt.graph.total_weight_bytes,
+            self.hw.hbm_bytes_per_cycle)
+        rt.pause_until_s = max(rt.pause_until_s,
+                               now + pause_cycles / self.hw.freq_hz)
+        self._tenant_moved(rt)
+
     def _defrag_for(self, spec: TenantSpec, now: float) -> bool:
         """Migrate residents (most-scattered first, compaction objective)
         until a *connected* placement for the pending request exists.
-        Returns True if any tenant moved."""
+        Bounded by ``max_migrations_per_event``; returns True if any tenant
+        moved."""
         if self.policy.can_place(spec, strict=True):
             return False   # nothing to defragment
         order = sorted(
@@ -236,18 +399,33 @@ class ClusterScheduler:
             migrations += 1
             moved_any = True
             rt.placement = new_p
-            rt.migrations += 1
-            self.metrics.n_migrations += 1
-            pause_cycles = self.policy.migration_cycles(
-                new_p, rt.graph.total_weight_bytes,
-                self.hw.hbm_bytes_per_cycle)
-            rt.pause_until_s = max(rt.pause_until_s,
-                                   now + pause_cycles / self.hw.freq_hz)
-            self._flows.pop(rt.spec.tid, None)
-            self._dirty = True
+            self._charge_migration(rt, now)
             if self.policy.can_place(spec, strict=True):
                 break
         return moved_any
+
+    def _fail_cores(self, cores: Sequence[int], now: float) -> None:
+        """Dead hardware: quarantine the cores through the policy, then
+        live-migrate every resident touching them (``avoid=`` the dead
+        set), charging the usual migration pause.  A tenant the policy
+        cannot move keeps running degraded on its old cores — the model's
+        stand-in for a stranded tenant awaiting operator action."""
+        cores = tuple(int(c) for c in cores)
+        self.policy.mark_failed(cores)
+        # count each physical core's death once, however many failure
+        # events name it (the policy's quarantine is idempotent too)
+        newly_dead = set(cores) - self._failed_cores
+        self._failed_cores |= newly_dead
+        self.metrics.n_failed_cores += len(newly_dead)
+        dead = set(cores)
+        for rt in list(self._residents.values()):
+            if not dead & set(rt.placement.cores):
+                continue
+            new_p, moved = self.policy.migrate(rt.placement, avoid=cores)
+            if not moved:
+                continue
+            rt.placement = new_p
+            self._charge_migration(rt, now)
 
     def _reject(self, spec: TenantSpec, wait_s: float) -> None:
         """A tenant that gave up: censor its wait into the latency metrics
@@ -265,6 +443,8 @@ class ClusterScheduler:
         self._waiting = kept
 
     def _drain_queue(self, now: float, evq: EventQueue) -> None:
+        """Admit as many waiting tenants as now fit (FIFO with backfill);
+        one defrag attempt on behalf of the queue head."""
         self._expire_waiting(now)
         still: List[Tuple[TenantSpec, float]] = []
         for i, (spec, enq) in enumerate(self._waiting):
@@ -282,7 +462,16 @@ class ClusterScheduler:
 
     # -- main loop ---------------------------------------------------------
     def run(self, trace: Sequence[TenantSpec],
-            trace_name: str = "") -> ClusterMetrics:
+            trace_name: str = "",
+            failures: Sequence[Tuple[float, Sequence[int]]] = ()
+            ) -> ClusterMetrics:
+        """Replay ``trace`` (plus optional ``failures``: ``(time_s, dead
+        core ids)`` pairs) to completion and return the metrics.
+
+        One-shot: the policy's placement state survives a run, so reuse
+        would mix tenants across traces — build a fresh scheduler+policy
+        per run (as :func:`compare_policies` does).
+        """
         if self._residents or self._waiting or self._last_t > 0.0:
             raise RuntimeError(
                 "ClusterScheduler.run() is one-shot: the policy's placement "
@@ -290,10 +479,13 @@ class ClusterScheduler:
                 "traces — build a fresh scheduler+policy per run (as "
                 "compare_policies does)")
         self.metrics = ClusterMetrics(policy=self.policy.name,
-                                      trace=trace_name)
+                                      trace=trace_name,
+                                      rescore_mode=self.rescore_mode)
         evq = EventQueue()
         for spec in trace:
             evq.push(spec.arrival_s, ARRIVAL, spec=spec)
+        for fail_t, dead in failures:
+            evq.push(fail_t, FAILURE, cores=tuple(dead))
         if self.epoch_s > 0:
             evq.push(self.epoch_s, EPOCH)
 
@@ -318,17 +510,18 @@ class ClusterScheduler:
                 rt = self._residents.pop(ev.tid, None)
                 if rt is not None:
                     self.policy.release(rt.placement)
-                    self._flows.pop(ev.tid, None)
-                    self._dirty = True
+                    self._tenant_departed(ev.tid)
                     self.metrics.tenant_iterations[ev.tid] = \
                         rt.served_iterations
                     self.metrics.tenant_active_s[ev.tid] = \
                         max(rt.depart_s - rt.admit_s, 0.0)
                 self._drain_queue(now, evq)
+            elif ev.kind == FAILURE:
+                self._fail_cores(ev.cores, now)
+                self._drain_queue(now, evq)
             elif ev.kind == EPOCH:
                 self._drain_queue(now, evq)
-                if self._dirty:
-                    self._rescore()
+                self._ensure_scores()
                 self.metrics.samples.append(EpochSample(
                     t=now,
                     utilization=self.policy.utilization(),
@@ -349,6 +542,8 @@ class ClusterScheduler:
         counters = getattr(self.policy, "engine_counters", None)
         if callable(counters):
             self.metrics.engine_counters = counters()
+        if self.ledger is not None:
+            self.metrics.ledger_counters = self.ledger.counters.as_dict()
         return self.metrics
 
 

@@ -17,9 +17,12 @@ from typing import Iterator, Optional
 ARRIVAL = "arrival"
 DEPARTURE = "departure"
 EPOCH = "epoch"
+FAILURE = "failure"               # dead cores: quarantine + migrate residents
 
-# same-timestamp processing order: free cores, then observe, then admit
-_KIND_PRIORITY = {DEPARTURE: 0, EPOCH: 1, ARRIVAL: 2}
+# same-timestamp processing order: free cores, then fail hardware, then
+# observe, then admit — a departure at the same instant as a failure frees
+# its cores before the quarantine, and an arrival sees the post-failure mesh
+_KIND_PRIORITY = {DEPARTURE: 0, FAILURE: 1, EPOCH: 2, ARRIVAL: 3}
 
 
 @dataclasses.dataclass
@@ -43,16 +46,21 @@ class TenantSpec:
 
 @dataclasses.dataclass(order=True)
 class Event:
+    """One scheduled occurrence.  ``time`` is wall-clock seconds; exactly
+    one payload field is set per kind: ``spec`` (arrival), ``tid``
+    (departure) or ``cores`` (failure — the physical core ids that died)."""
     time: float
     priority: int
     seq: int
     kind: str = dataclasses.field(compare=False)
     spec: Optional[TenantSpec] = dataclasses.field(compare=False, default=None)
     tid: Optional[int] = dataclasses.field(compare=False, default=None)
+    cores: Optional[tuple] = dataclasses.field(compare=False, default=None)
 
 
 class EventQueue:
-    """A heap of events ordered by (time, kind priority, insertion seq)."""
+    """A heap of events ordered by (time, kind priority, insertion seq).
+    ``push``/``pop`` are O(log n); ``peek`` is O(1)."""
 
     def __init__(self) -> None:
         self._heap: list[Event] = []
@@ -60,16 +68,21 @@ class EventQueue:
 
     def push(self, time: float, kind: str,
              spec: Optional[TenantSpec] = None,
-             tid: Optional[int] = None) -> Event:
+             tid: Optional[int] = None,
+             cores: Optional[tuple] = None) -> Event:
+        """Schedule ``kind`` at ``time`` (seconds) with its payload."""
         ev = Event(time=time, priority=_KIND_PRIORITY.get(kind, 9),
-                   seq=next(self._seq), kind=kind, spec=spec, tid=tid)
+                   seq=next(self._seq), kind=kind, spec=spec, tid=tid,
+                   cores=cores)
         heapq.heappush(self._heap, ev)
         return ev
 
     def pop(self) -> Event:
+        """Remove and return the earliest event."""
         return heapq.heappop(self._heap)
 
     def peek(self) -> Optional[Event]:
+        """The earliest event without removing it (None when empty)."""
         return self._heap[0] if self._heap else None
 
     def __len__(self) -> int:
@@ -79,5 +92,6 @@ class EventQueue:
         return bool(self._heap)
 
     def drain(self) -> Iterator[Event]:
+        """Pop every event in time order (consumes the queue)."""
         while self._heap:
             yield self.pop()

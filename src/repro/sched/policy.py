@@ -8,10 +8,16 @@ implementations adapt the core allocators:
   with fragmented fallback, dataflow (NoC) communication, live migration
   for defragmentation (``Hypervisor.migrate_vnpu``);
 * :class:`MIGPolicy` — fixed rectangular partitions, TDM when a request
-  exceeds every free partition; no migration (a partition is a partition);
+  exceeds every free partition; no defragmentation (a partition is a
+  partition), but failed-partition evacuation moves a tenant to another
+  free partition;
 * :class:`UVMPolicy` — any free cores, all inter-core traffic through
-  global memory (the HBM-contended baseline); migration is trivial but
-  pointless (no topology to defragment), so it reports "not moved".
+  global memory (the HBM-contended baseline); defragmentation is
+  pointless (no topology), but dead cores are swapped for free ones.
+
+All three implement ``mark_failed`` (quarantine: vNPU per-core via the
+hypervisor, MIG per-partition, UVM per-core), so failure injection in the
+cluster loop is meaningful for every policy.
 
 ``utilization()`` is comparable across policies: fraction of physical
 cores doing *useful* work.  For vNPU/UVM this equals allocated/total
@@ -148,6 +154,8 @@ class VNPUPolicy(PlacementPolicy):
         self.mapper = mapper
 
     def _request(self, spec: TenantSpec, strict: bool) -> VNPURequest:
+        """Translate a tenant spec into the hypervisor's request form (the
+        most-square mesh of ``n_cores``; connectivity required iff strict)."""
         return VNPURequest(
             topology=mesh_2d(*best_rect(spec.n_cores), base_id=10_000),
             memory_bytes=spec.memory_bytes,
@@ -156,6 +164,10 @@ class VNPUPolicy(PlacementPolicy):
             mapper=self.mapper)
 
     def allocate(self, spec: TenantSpec, strict: bool = False) -> Placement:
+        """Place through the MappingEngine (cached minTopologyEditDistance
+        over the free components — typically a cache hit after a
+        ``can_place`` probe); raises :class:`AllocationError` when no
+        candidate of the right size exists."""
         vnpu = self.hyp.create_vnpu(self._request(spec, strict))
         return self._register(Placement(
             tid=spec.tid, cores=tuple(sorted(vnpu.p_cores)),
@@ -171,17 +183,28 @@ class VNPUPolicy(PlacementPolicy):
         return self.hyp.can_allocate(self._request(spec, strict))
 
     def mark_failed(self, cores: Sequence[int]) -> None:
+        """Quarantine dead cores in the hypervisor: they leave the free
+        pool permanently and never rejoin it, even after their tenant
+        migrates away or is destroyed."""
         self.hyp.mark_failed(cores)
 
     def engine_counters(self) -> Dict[str, float]:
+        """MappingEngine telemetry snapshot (cache hits/misses, escalations,
+        region ops) — surfaced into :class:`ClusterMetrics`."""
         return self.hyp.engine.counters()
 
     def release(self, placement: Placement) -> None:
+        """Destroy the vNPU: cores rejoin the free set (O(component) region
+        merge in the engine), routing-table entries are removed."""
         self.hyp.destroy_vnpu(placement.handle)
         self._unregister(placement)
 
     def migrate(self, placement: Placement,
                 avoid: Sequence[int] = ()) -> Tuple[Placement, bool]:
+        """Live migration via ``Hypervisor.migrate_vnpu`` (remap with the
+        tenant's own cores counted free, ``avoid`` advisory — see
+        ``mark_failed`` for dead hardware).  Returns ``(placement, moved)``;
+        never raises on an unplaceable move — reports ``moved=False``."""
         try:
             vnpu, moved = self.hyp.migrate_vnpu(
                 placement.handle, node_match=mem_dist_node_match(0.5),
@@ -195,9 +218,11 @@ class VNPUPolicy(PlacementPolicy):
         return self._register(new), True
 
     def utilization(self) -> float:
+        """Allocated / healthy (non-quarantined) cores, in [0, 1]."""
         return self.hyp.utilization()
 
     def free_cores(self) -> Set[int]:
+        """Currently allocatable physical core ids (engine-derived)."""
         return self.hyp.free_cores()
 
 
@@ -222,6 +247,10 @@ class MIGPolicy(PlacementPolicy):
         self.mig = MIGPartitioner(topo, partition_shapes)
 
     def allocate(self, spec: TenantSpec, strict: bool = False) -> Placement:
+        """Claim the best-fitting free partition (O(partitions)); when the
+        request exceeds every free partition, the largest one is
+        time-shared (TDM): ``time_share < 1`` and ``tdm_physical`` carry
+        the oversubscription to the simulator."""
         part, share = self.mig.allocate(spec.n_cores)
         pcores = sorted(part.cores)
         if share >= 1.0:
@@ -238,17 +267,46 @@ class MIGPolicy(PlacementPolicy):
             tdm_physical=tdm, handle=part.pid))
 
     def can_place(self, spec: TenantSpec, strict: bool = False) -> bool:
-        # TDM makes any free partition admissible, whatever the request
-        return any(p.occupied_by is None for p in self.mig.partitions)
+        # TDM makes any free healthy partition admissible, whatever the
+        # request
+        return any(p.occupied_by is None and not p.failed
+                   for p in self.mig.partitions)
+
+    def mark_failed(self, cores: Sequence[int]) -> None:
+        """Dead cores poison their whole partition (MIG has no finer
+        quarantine granularity): it is never allocated again."""
+        self.mig.mark_failed(cores)
+
+    def migrate(self, placement: Placement,
+                avoid: Sequence[int] = ()) -> Tuple[Placement, bool]:
+        """MIG cannot defragment (a partition is a partition), but it *can*
+        evacuate: when ``avoid`` overlaps the tenant's cores (the failure
+        path), re-allocate the same virtual-core count on another free
+        healthy partition.  Returns ``moved=False`` when none exists."""
+        if not set(avoid) & set(placement.cores):
+            return placement, False
+        probe = TenantSpec(tid=placement.tid, model="", arrival_s=0.0,
+                           duration_s=0.0, n_cores=len(placement.cores))
+        try:
+            new = self.allocate(probe)
+        except AllocationError:
+            return placement, False
+        self.mig.release(placement.handle)
+        return new, True
 
     def release(self, placement: Placement) -> None:
+        """Return the whole partition (MIG holds it regardless of how many
+        cores the tenant actually used)."""
         self.mig.release(placement.handle)
         self._unregister(placement)
 
     def utilization(self) -> float:
+        """*Useful* cores / total: an occupied partition contributes only
+        the cores its tenant requested — internal fragmentation shows."""
         return self.mig.utilization()
 
     def free_cores(self) -> Set[int]:
+        """Cores of currently unoccupied partitions."""
         return self.mig.free_cores()
 
 
@@ -262,19 +320,48 @@ class UVMPolicy(PlacementPolicy):
         self.uvm = UVMAllocator(topo)
 
     def allocate(self, spec: TenantSpec, strict: bool = False) -> Placement:
+        """Any ``n_cores`` free cores, topology ignored (O(free set)); all
+        inter-core traffic is marked as shared-HBM (``hbm_client``)."""
         cores = self.uvm.allocate(spec.n_cores)
         return self._register(Placement(
             tid=spec.tid, cores=tuple(sorted(cores)), comm="uvm",
             hbm_client=True, handle=cores))
 
     def release(self, placement: Placement) -> None:
+        """Free the exact allocated cores."""
         self.uvm.release(placement.handle)
         self._unregister(placement)
 
+    def mark_failed(self, cores: Sequence[int]) -> None:
+        """Quarantine dead cores: they never rejoin the free pool."""
+        self.uvm.mark_failed(cores)
+
+    def migrate(self, placement: Placement,
+                avoid: Sequence[int] = ()) -> Tuple[Placement, bool]:
+        """Topology-blind, so defragmentation is pointless (``avoid``
+        disjoint from the tenant: not moved) — but evacuation is not: cores
+        in ``avoid`` that the tenant owns are swapped for free ones when
+        available (callers on the failure path ``mark_failed`` first, which
+        keeps the dead cores out of the replacement pick)."""
+        bad = set(avoid) & set(placement.cores)
+        if not bad:
+            return placement, False
+        try:
+            repl = self.uvm.allocate(len(bad))
+        except AllocationError:
+            return placement, False
+        self.uvm.release(bad)
+        cores = frozenset(set(placement.cores) - bad) | repl
+        new = dataclasses.replace(placement, cores=tuple(sorted(cores)),
+                                  handle=cores)
+        return self._register(new), True
+
     def utilization(self) -> float:
+        """Allocated / total cores, in [0, 1] (allocations are exact)."""
         return self.uvm.utilization()
 
     def free_cores(self) -> Set[int]:
+        """Currently unallocated physical core ids."""
         return self.uvm.free_cores()
 
 
@@ -286,6 +373,8 @@ POLICIES = {
 
 
 def make_policy(name: str, topo: Topology, **kwargs) -> PlacementPolicy:
+    """Instantiate a registered policy (``vnpu`` / ``mig`` / ``uvm``) over
+    ``topo``; extra kwargs go to the policy constructor."""
     try:
         cls = POLICIES[name]
     except KeyError:

@@ -5,6 +5,12 @@ drawn from a catalog that combines the simulator's workload registry
 (:mod:`repro.core.workloads`) with serving-model proxies derived from the
 real model configs under :mod:`repro.configs` (a config's depth/width/vocab
 become a tensor-parallel transformer graph the simulator can score).
+
+Named families (``TRACES``): ``mixed`` / ``small`` / ``large`` /
+``bursty`` target the paper's 6x6 SIM config; ``pod-mixed`` carries
+pod-matched arrival rates and 2–48-core asks for 16x16–32x32 meshes (the
+README table lists rates and intended ``--mesh`` sizes).  All times are
+seconds; traces are deterministic per seed.
 """
 from __future__ import annotations
 
@@ -99,9 +105,33 @@ LARGE_CATALOG: Tuple[CatalogEntry, ...] = (
     CatalogEntry("resnet50", (8, 12), sla_wait_s=30.0, weight=1.0),
 )
 
+# Pod-scale mix (256–1024 cores, i.e. --mesh 16,16 to 32,32): the same
+# service classes as MIXED but with core asks and an arrival rate matched
+# to pods — mean demand ~8.5 cores x 30 s at 2.2 arrivals/s is ~560
+# occupied cores in steady state (55% of a 32x32 mesh; an overload/queueing
+# stress at 16x16).  This is the trace the ledger's epoch-scoring gate and
+# the ROADMAP pod-scale items measure against.
+POD_CATALOG: Tuple[CatalogEntry, ...] = (
+    CatalogEntry("yolo_lite", (2, 3), sla_wait_s=10.0, weight=2.0),
+    CatalogEntry("mobilenet", (2, 4), sla_wait_s=10.0, weight=2.0),
+    CatalogEntry("resnet18", (4, 6), sla_wait_s=15.0, weight=2.0),
+    CatalogEntry("resnet50", (8, 12), sla_wait_s=20.0, weight=1.5),
+    CatalogEntry("qwen2_0_5b", (4, 8), sla_wait_s=20.0, weight=1.5),
+    CatalogEntry("llama3_2_1b", (9, 16), sla_wait_s=30.0, weight=1.0),
+    CatalogEntry("gpt2_small", (16, 25), sla_wait_s=45.0, weight=0.75),
+    CatalogEntry("gpt2_medium", (24, 36), sla_wait_s=60.0, weight=0.5),
+    CatalogEntry("qwen2_7b", (32, 48), sla_wait_s=90.0, weight=0.25),
+)
+
 
 @dataclasses.dataclass
 class TraceConfig:
+    """One named arrival process: a catalog plus Poisson parameters.
+
+    ``horizon_s``/``service_mean_s`` are seconds, ``rate_per_s`` is
+    arrivals/second; ``intended_mesh`` documents the physical mesh sizes
+    the rates were tuned for (``cluster_sim.py --mesh``).
+    """
     name: str = "mixed"
     seed: int = 0
     horizon_s: float = 120.0          # arrivals stop here; departures run on
@@ -111,6 +141,7 @@ class TraceConfig:
     # bursty traffic: cycle of (phase_length_s, rate_per_s) overriding
     # rate_per_s when set
     rate_phases: Optional[Sequence[Tuple[float, float]]] = None
+    intended_mesh: str = "6x6"        # documentation: mesh the rates target
 
 
 def poisson_trace(cfg: TraceConfig) -> List[TenantSpec]:
@@ -177,11 +208,17 @@ TRACES: Dict[str, TraceConfig] = {
                          rate_per_s=0.15, service_mean_s=40.0),
     "bursty": TraceConfig(name="bursty",
                           rate_phases=((20.0, 1.2), (20.0, 0.1))),
+    "pod-mixed": TraceConfig(name="pod-mixed", catalog=POD_CATALOG,
+                             rate_per_s=2.2, service_mean_s=30.0,
+                             horizon_s=90.0,
+                             intended_mesh="16x16-32x32"),
 }
 
 
 def make_trace(name: str, seed: Optional[int] = None,
                horizon_s: Optional[float] = None) -> List[TenantSpec]:
+    """Materialize a named trace (optionally overriding seed/horizon).
+    O(rate x horizon) tenants; deterministic per seed."""
     try:
         cfg = TRACES[name]
     except KeyError:

@@ -1,0 +1,66 @@
+"""Docs lint in tier-1: documented commands and links must resolve (the
+same checks the CI docs job runs via tools/check_docs.py)."""
+import importlib.util
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", ROOT / "tools" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+class TestCommandParsing:
+    def test_extract_commands_joins_continuations(self):
+        text = ("intro\n```bash\n# comment\npip install -e .\n"
+                "PYTHONPATH=src python benchmarks/cluster_sim.py \\\n"
+                "    --trace mixed --policy vnpu\n```\n")
+        cmds = check_docs.extract_commands(text)
+        assert cmds == ["PYTHONPATH=src python benchmarks/cluster_sim.py "
+                        "--trace mixed --policy vnpu"]
+
+    def test_parse_python_command(self):
+        target, flags, values = check_docs.parse_python_command(
+            "PYTHONPATH=src python benchmarks/cluster_sim.py "
+            "--trace pod-mixed --mesh 32,32 --json")
+        assert target == "benchmarks/cluster_sim.py"
+        assert flags == ["--trace", "--mesh", "--json"]
+        assert values == {"--trace": "pod-mixed", "--mesh": "32,32"}
+
+    def test_parse_module_invocation(self):
+        target, flags, _ = check_docs.parse_python_command(
+            "PYTHONPATH=src python -m benchmarks.run")
+        assert target == "-m benchmarks.run"
+        assert flags == []
+
+
+class TestDocChecker:
+    def test_repo_docs_are_clean(self):
+        """The real README / architecture / DESIGN commands all validate."""
+        assert check_docs.DocChecker().run() == 0
+
+    def test_detects_unknown_flag_and_trace(self):
+        checker = check_docs.DocChecker()
+        checker.check_command(
+            "fake.md", "PYTHONPATH=src python benchmarks/cluster_sim.py "
+            "--no-such-flag --trace not-a-trace")
+        msgs = "\n".join(checker.errors)
+        assert "--no-such-flag" in msgs
+        assert "not-a-trace" in msgs
+
+    def test_detects_missing_script(self):
+        checker = check_docs.DocChecker()
+        checker.check_command("fake.md", "python benchmarks/gone.py --json")
+        assert any("missing file" in e for e in checker.errors)
+
+    def test_detects_broken_link(self):
+        checker = check_docs.DocChecker()
+        checker.check_links("README.md", "see [x](docs/absent.md)")
+        assert any("broken link" in e for e in checker.errors)
+
+    def test_architecture_doc_linked_from_readme(self):
+        readme = (ROOT / "README.md").read_text()
+        assert "docs/architecture.md" in readme
+        assert (ROOT / "docs" / "architecture.md").exists()

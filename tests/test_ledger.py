@@ -1,0 +1,345 @@
+"""InterferenceLedger: incremental occupancy == oracle recompute across
+random allocate/release/migrate/fail sequences, and scheduler-level
+bit-identity of ledger-based epoch scoring vs the O(R^2 x flows) oracle."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests degrade, unit tests still run
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import mesh_2d
+from repro.core import simulator as S
+from repro.core import workloads as W
+from repro.core.simulator import Flow, flow_link_loads, flow_paths, \
+    link_contention
+from repro.sched import (ClusterScheduler, InterferenceLedger, TenantSpec,
+                         make_policy, make_trace)
+from repro.sched.traces import TRACES
+
+
+def _spec(tid=1, model="resnet18", n_cores=4, arrival=0.0, duration=10.0,
+          **kw):
+    return TenantSpec(tid=tid, model=model, n_cores=n_cores,
+                      arrival_s=arrival, duration_s=duration, **kw)
+
+
+# ---------------------------------------------------------------------------
+# simulator: the pre-aggregated external-loads fast path
+# ---------------------------------------------------------------------------
+
+class TestExternalLinkLoads:
+    def test_flow_link_loads_aggregates_directed_edges(self):
+        topo = mesh_2d(1, 3)
+        loads = flow_link_loads(topo, [
+            Flow(src=0, dst=2, bytes_per_iter=100),
+            Flow(src=1, dst=2, bytes_per_iter=50),
+            Flow(src=2, dst=0, bytes_per_iter=7),    # opposite direction
+            Flow(src=1, dst=1, bytes_per_iter=9),    # no edges
+            Flow(src=0, dst=1, bytes_per_iter=0),    # zero bytes: pruned
+        ])
+        assert loads == {(0, 1): 100.0, (1, 2): 150.0, (2, 1): 7.0,
+                         (1, 0): 7.0}
+
+    def test_link_contention_external_loads_equals_flow_list(self):
+        """Seeding link_contention with aggregated loads must match listing
+        the external flows explicitly — exactly, not approximately."""
+        topo = mesh_2d(4, 4)
+        rng = np.random.default_rng(0)
+        nodes = sorted(topo.node_attrs)
+        for _ in range(20):
+            own = [Flow(int(rng.choice(nodes)), int(rng.choice(nodes)),
+                        int(rng.integers(0, 1 << 20)), owner=1)
+                   for _ in range(4)]
+            ext = [Flow(int(rng.choice(nodes)), int(rng.choice(nodes)),
+                        int(rng.integers(0, 1 << 20)), owner=2)
+                   for _ in range(6)]
+            all_flows = own + ext
+            ref = link_contention(flow_paths(topo, all_flows),
+                                  all_flows)[:len(own)]
+            fast = link_contention(flow_paths(topo, own), own,
+                                   external_loads=flow_link_loads(topo, ext))
+            assert fast == ref
+
+    @pytest.mark.parametrize("model,cores", [
+        ("resnet18", [0, 1, 2, 3]),            # pipeline
+        ("gpt2_small", [0, 1, 6, 7]),          # tensor-parallel ring
+    ])
+    def test_simulate_external_link_loads_bit_identical(self, model, cores):
+        topo = mesh_2d(6, 6)
+        hw = S.SIM_CONFIG
+        g = W.get_workload(model)
+        ext = S.tenant_flows(W.get_workload("transformer"), [14, 15, 20, 21],
+                             topo, hw, owner=9)
+        ref = S.simulate(g, cores, topo, hw, external_flows=ext)
+        fast = S.simulate(g, cores, topo, hw,
+                          external_link_loads=flow_link_loads(topo, ext))
+        assert fast.interval_cycles == ref.interval_cycles
+        assert fast.fps == ref.fps
+        assert fast.latency_cycles == ref.latency_cycles
+
+    def test_empty_loads_dict_keeps_ring_self_contention(self):
+        """external_link_loads={} must mean 'external flows exist but load
+        none of my links' (ring self-contention computed), while omitting it
+        means 'no external flows' (contention skipped) — the oracle's
+        flow-list truthiness semantics."""
+        topo = mesh_2d(6, 6)
+        hw = S.SIM_CONFIG
+        g = W.get_workload("gpt2_small")
+        cores = [0, 1, 6, 7]
+        quiet = S.simulate(g, cores, topo, hw)
+        # a co-located TDM flow has src == dst: a real external flow with no
+        # link footprint
+        ext = [Flow(src=30, dst=30, bytes_per_iter=1 << 20, owner=2)]
+        ref = S.simulate(g, cores, topo, hw, external_flows=ext)
+        fast = S.simulate(g, cores, topo, hw, external_link_loads={})
+        assert fast.interval_cycles == ref.interval_cycles
+        # the switch matters: the ring contends with itself on this layout
+        assert ref.interval_cycles >= quiet.interval_cycles
+
+
+# ---------------------------------------------------------------------------
+# the ledger property: incremental occupancy == oracle recompute
+# ---------------------------------------------------------------------------
+
+def _random_flows(rng, nodes, tid, max_flows=6):
+    n = int(rng.integers(0, max_flows + 1))
+    return [Flow(src=int(rng.choice(nodes)), dst=int(rng.choice(nodes)),
+                 bytes_per_iter=int(rng.integers(0, 1 << 22)), owner=tid)
+            for _ in range(n)]
+
+
+class TestLedgerOccupancyProperty:
+    @staticmethod
+    def _churn_check(seed):
+        """Random allocate/release/migrate/fail churn: the incrementally-
+        maintained link occupancy must always equal a from-scratch
+        aggregation of the current residents' flows — exactly."""
+        rng = np.random.default_rng(seed)
+        topo = mesh_2d(5, 5)
+        nodes = sorted(topo.node_attrs)
+        led = InterferenceLedger(topo)
+        flows_by_tid = {}
+        next_tid = 1
+        for _ in range(40):
+            u = rng.random()
+            if flows_by_tid and u < 0.3:                    # release
+                tid = int(rng.choice(sorted(flows_by_tid)))
+                led.remove(tid)
+                del flows_by_tid[tid]
+            elif flows_by_tid and u < 0.55:                 # migrate / fail
+                tid = int(rng.choice(sorted(flows_by_tid)))
+                flows = _random_flows(rng, nodes, tid)
+                led.update(tid, flows, hbm_client=bool(rng.random() < 0.2))
+                flows_by_tid[tid] = flows
+            else:                                           # allocate
+                tid = next_tid
+                next_tid += 1
+                flows = _random_flows(rng, nodes, tid)
+                led.add(tid, flows, hbm_client=bool(rng.random() < 0.2))
+                flows_by_tid[tid] = flows
+            led.check_invariants()
+            assert led.link_loads == led.oracle_link_loads(flows_by_tid)
+            for tid in flows_by_tid:
+                others = {t: f for t, f in flows_by_tid.items() if t != tid}
+                assert led.external_loads(tid) == \
+                    led.oracle_link_loads(others)
+                assert led.has_external(tid) == \
+                    any(f for f in others.values())
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_ledger_matches_oracle(self, seed):
+        self._churn_check(seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_ledger_matches_oracle_seeded(self, seed):
+        # deterministic variant that runs even without hypothesis
+        self._churn_check(seed)
+
+    def test_double_add_rejected(self):
+        led = InterferenceLedger(mesh_2d(3, 3))
+        led.add(1, [])
+        with pytest.raises(ValueError):
+            led.add(1, [])
+
+    def test_remove_unknown_is_noop(self):
+        led = InterferenceLedger(mesh_2d(3, 3))
+        led.remove(99)
+        assert led.link_loads == {} and not led.dirty
+
+
+class TestLedgerDirtySet:
+    def test_disjoint_tenants_do_not_dirty_each_other(self):
+        """Two tenants in opposite mesh corners share no links: placing and
+        removing one must not invalidate the other once both are scored."""
+        topo = mesh_2d(6, 6)
+        led = InterferenceLedger(topo)
+        far = [Flow(src=28, dst=35, bytes_per_iter=1000, owner=2)]
+        near = [Flow(src=0, dst=7, bytes_per_iter=1000, owner=1)]
+        led.add(1, near)
+        led.add(2, far)           # crosses the 0/1 external boundary
+        led.take_dirty()
+        led.add(3, [Flow(src=30, dst=31, bytes_per_iter=10, owner=3)])
+        # tenant 1's links (top-left) are untouched by tenant 3 (bottom row)
+        assert 1 not in led.dirty and 3 in led.dirty
+        led.take_dirty()
+        led.remove(3)
+        assert 1 not in led.dirty
+
+    def test_overlapping_footprints_dirty(self):
+        topo = mesh_2d(6, 6)
+        led = InterferenceLedger(topo)
+        led.add(1, [Flow(src=0, dst=2, bytes_per_iter=1000, owner=1)])
+        led.take_dirty()
+        led.add(2, [Flow(src=1, dst=3, bytes_per_iter=1000, owner=2)])
+        assert {1, 2} <= led.dirty   # share the (1, 2) directed link
+
+    def test_lone_flow_tenant_flips_on_boundary(self):
+        """The tensor model computes ring self-contention only when external
+        flows exist — so the 0<->1 co-resident-with-flows boundary must
+        dirty the lone flow tenant even with disjoint links."""
+        topo = mesh_2d(6, 6)
+        led = InterferenceLedger(topo)
+        led.add(1, [Flow(src=0, dst=1, bytes_per_iter=10, owner=1)])
+        led.take_dirty()
+        led.add(2, [Flow(src=34, dst=35, bytes_per_iter=10, owner=2)])
+        assert 1 in led.dirty         # gained external traffic
+        led.take_dirty()
+        led.remove(2)
+        assert 1 in led.dirty         # lost all external traffic
+
+    def test_hbm_client_dirties_everyone(self):
+        topo = mesh_2d(6, 6)
+        led = InterferenceLedger(topo)
+        led.add(1, [Flow(src=0, dst=1, bytes_per_iter=10, owner=1)])
+        led.add(2, [])
+        led.take_dirty()
+        led.add(3, [], hbm_client=True)
+        assert {1, 2, 3} <= led.dirty
+        assert led.hbm_clients == 1
+        led.take_dirty()
+        led.remove(3)
+        assert {1, 2} <= led.dirty and led.hbm_clients == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level: ledger scoring bit-identical to the oracle
+# ---------------------------------------------------------------------------
+
+def _run_both(policy_name, trace, mesh=(6, 6), failures=(), **kw):
+    out = {}
+    for mode in ("ledger", "oracle"):
+        policy = make_policy(policy_name, mesh_2d(*mesh))
+        sched = ClusterScheduler(policy, epoch_s=2.0, rescore=mode, **kw)
+        out[mode] = sched.run(trace, trace_name="t", failures=failures)
+    return out["ledger"], out["oracle"]
+
+
+def _trajectory(m):
+    return ([(s.t, s.agg_fps, s.utilization, s.n_resident, s.n_queued)
+             for s in m.samples], m.tenant_iterations, m.tenant_active_s,
+            m.n_admitted, m.n_rejected, m.n_migrations)
+
+
+class TestSchedulerLedgerEqualsOracle:
+    @pytest.mark.parametrize("policy", ["vnpu", "mig", "uvm"])
+    def test_mixed_trace_bit_identical(self, policy):
+        trace = make_trace("mixed", seed=7, horizon_s=35.0)
+        ledger, oracle = _run_both(policy, trace)
+        assert _trajectory(ledger) == _trajectory(oracle)
+        assert ledger.ledger_counters and not oracle.ledger_counters
+
+    def test_pod_mixed_trace_bit_identical(self):
+        # the full-size pod-mixed identity check runs in the CI gate
+        # (cluster_sim --gate, 16x16); here keep tier-1 fast by dropping
+        # the asks that dwarf an 8x8 mesh and would only exercise the
+        # engine's (already-gated) fragmented fallback over and over
+        trace = [t for t in make_trace("pod-mixed", seed=3, horizon_s=8.0)
+                 if t.n_cores <= 16]
+        assert trace
+        ledger, oracle = _run_both("vnpu", trace, mesh=(8, 8))
+        assert _trajectory(ledger) == _trajectory(oracle)
+
+    @pytest.mark.parametrize("policy", ["vnpu", "mig", "uvm"])
+    def test_bit_identical_under_failures(self, policy):
+        """allocate/release/migrate/fail all maintain the ledger: inject
+        core failures mid-trace and require identical trajectories."""
+        trace = make_trace("mixed", seed=11, horizon_s=30.0)
+        failures = [(8.0, (0, 1)), (18.0, (22,))]
+        ledger, oracle = _run_both(policy, trace, failures=failures)
+        assert _trajectory(ledger) == _trajectory(oracle)
+        assert ledger.n_failed_cores == 3
+
+    def test_repeated_failure_of_same_core_counted_once(self):
+        pol = make_policy("uvm", mesh_2d(3, 3))
+        sched = ClusterScheduler(pol, epoch_s=1.0)
+        m = sched.run([_spec(tid=1, n_cores=2, duration=10.0)],
+                      failures=[(2.0, (8,)), (4.0, (8, 7))])
+        assert m.n_failed_cores == 2          # core 8 died once, not twice
+
+    @pytest.mark.parametrize("policy", ["mig", "uvm"])
+    def test_baseline_policies_quarantine_and_evacuate(self, policy):
+        """Failure injection is meaningful for the baselines too: dead
+        cores leave the free pool and the resident is moved off them."""
+        pol = make_policy(policy, mesh_2d(4, 4))
+        sched = ClusterScheduler(pol, epoch_s=1.0)
+        spec = _spec(tid=1, model="resnet18", n_cores=4, duration=20.0)
+        m = sched.run([spec], failures=[(5.0, (0,))])
+        assert m.n_admitted == 1
+        assert m.n_failed_cores == 1
+        assert m.n_migrations >= 1
+        assert 0 not in pol.free_cores()
+        # quarantine persists after the tenant departs
+        assert pol.utilization() == 0.0
+
+    def test_uvm_defrag_migration_still_pointless(self):
+        pol = make_policy("uvm", mesh_2d(3, 3))
+        p = pol.allocate(_spec(tid=1, n_cores=3))
+        assert pol.migrate(p) == (p, False)   # no avoid overlap: no move
+
+    def test_failure_quarantines_and_migrates(self):
+        pol = make_policy("vnpu", mesh_2d(4, 4))
+        sched = ClusterScheduler(pol, epoch_s=1.0)
+        spec = _spec(tid=1, model="resnet18", n_cores=4, duration=20.0)
+        m = sched.run([spec], failures=[(5.0, (0,))])
+        assert m.n_admitted == 1
+        assert m.n_failed_cores == 1
+        assert m.n_migrations >= 1       # resident moved off the dead core
+        assert 0 not in pol.free_cores() # quarantined, never freed
+
+    def test_ledger_reuses_scores(self):
+        """The point of the tentpole: a run must *reuse* some cached tenant
+        scores (the oracle recomputes everything every pass)."""
+        trace = make_trace("mixed", seed=7, horizon_s=35.0)
+        ledger, _ = _run_both("vnpu", trace)
+        lc = ledger.ledger_counters
+        assert lc["reused"] > 0
+        assert lc["reuse_rate"] > 0.0
+
+    def test_invalid_rescore_mode_rejected(self):
+        with pytest.raises(ValueError):
+            ClusterScheduler(make_policy("uvm", mesh_2d(3, 3)),
+                             rescore="nope")
+
+
+# ---------------------------------------------------------------------------
+# pod-mixed trace family
+# ---------------------------------------------------------------------------
+
+class TestPodMixedTrace:
+    def test_registered_with_pod_rates(self):
+        cfg = TRACES["pod-mixed"]
+        assert cfg.intended_mesh == "16x16-32x32"
+        trace = make_trace("pod-mixed", seed=1, horizon_s=20.0)
+        assert trace
+        assert max(t.n_cores for t in trace) > 9     # beyond 6x6 asks
+        # arrival rate matched to pods: ~2.2/s vs mixed's 0.45/s
+        assert len(trace) > len(make_trace("mixed", seed=1, horizon_s=20.0))
+
+    def test_deterministic(self):
+        a = make_trace("pod-mixed", seed=5, horizon_s=15.0)
+        b = make_trace("pod-mixed", seed=5, horizon_s=15.0)
+        assert [(t.tid, t.arrival_s, t.n_cores) for t in a] == \
+            [(t.tid, t.arrival_s, t.n_cores) for t in b]
