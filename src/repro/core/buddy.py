@@ -83,6 +83,21 @@ class BuddyAllocator:
     def free_bytes(self) -> int:
         return self.total - self.used_bytes()
 
+    def state_key(self) -> Tuple[Tuple[int, int], ...]:
+        """Digest of the free-block *size multiset*: ((order, count), ...).
+
+        Whether any sequence of ``alloc`` sizes can succeed is a function
+        of this multiset alone (splitting is deterministic in sizes, and
+        addresses never gate success), so two states with equal keys give
+        identical success/failure for identical request sequences — what
+        the scheduler's negative-probe memo compares.  Deliberately *not*
+        an operation counter: a rolled-back allocation (the OOM path
+        restores every block) returns to the same key, so repeated
+        memory-infeasible probes memoize instead of thrashing.
+        """
+        return tuple((o, len(blocks)) for o, blocks in sorted(self.free.items())
+                     if blocks)
+
     def check_invariants(self) -> None:
         """No overlaps, full coverage. Used by hypothesis property tests."""
         spans = []

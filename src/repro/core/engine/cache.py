@@ -25,16 +25,22 @@ from ..mapping import MappingResult
 
 @dataclasses.dataclass(frozen=True)
 class CachedMapping:
-    """A MappingResult lifted into canonical index space."""
+    """A MappingResult lifted into canonical index space.  ``transform``
+    records the D4 group element of the *encoding* region's canonical
+    frame — a later hit whose region canonicalizes through a different
+    element is a genuinely symmetry-decoded result (one a
+    translation-only key could not have served)."""
     ted: float
     nodes_idx: Tuple[int, ...]                 # indices into the region order
     assign_idx: Tuple[Tuple[int, int], ...]    # (request idx, region idx)
     exact: bool
     candidates_evaluated: int
+    transform: str = "identity"
 
 
 def encode_result(result: MappingResult, region_order: Sequence[int],
-                  request_order: Sequence[int]) -> CachedMapping:
+                  request_order: Sequence[int],
+                  transform: str = "identity") -> CachedMapping:
     rpos = {n: i for i, n in enumerate(region_order)}
     qpos = {n: i for i, n in enumerate(request_order)}
     return CachedMapping(
@@ -43,7 +49,8 @@ def encode_result(result: MappingResult, region_order: Sequence[int],
         assign_idx=tuple(sorted((qpos[v], rpos[p])
                                 for v, p in result.assignment.items())),
         exact=result.exact,
-        candidates_evaluated=result.candidates_evaluated)
+        candidates_evaluated=result.candidates_evaluated,
+        transform=transform)
 
 
 def decode_result(entry: CachedMapping, region_order: Sequence[int],

@@ -16,7 +16,8 @@ full enumeration for small regions), restructured for the engine:
 """
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import (Dict, FrozenSet, Iterable, Iterator, List, Optional,
+                    Sequence, Set, Tuple)
 
 import numpy as np
 
@@ -28,17 +29,23 @@ FULL_ENUM_MAX_RESULTS = 20_000
 
 def rect_windows(topo: Topology, nodes: Set[int], k: int,
                  shapes: Optional[List[Tuple[int, int, int]]] = None
-                 ) -> List[Tuple[int, ...]]:
+                 ) -> Iterator[Tuple[int, ...]]:
     """All r x c windows (r*c == k) fully inside ``nodes``, plus clipped
     rectangles (r*c > k, excess removed from the end of the last row).
-    Returns node tuples in row-major window order (the natural assignment
+    Yields node tuples in row-major window order (the natural assignment
     order for rectangular requests).  ``shapes`` (a list of
     ``(rows, cols, clip)``) restricts generation — e.g. the rect-greedy
     mapper asks only for the request's exact shape.
+
+    A generator: consumers that stop at ``max_candidates`` (the engine's
+    candidate pool) never materialize the tail — on a mostly-free pod mesh
+    one shape can have hundreds of positions, and the enumeration order
+    (shape, then row-major position) is unchanged, so truncation picks the
+    same prefix the eager list did.
     """
     coords = topo.coords
     if not coords or any(n not in coords for n in nodes):
-        return []
+        return
     r0 = min(coords[n][0] for n in nodes)
     c0 = min(coords[n][1] for n in nodes)
     R = 1 + max(coords[n][0] for n in nodes) - r0
@@ -61,15 +68,13 @@ def rect_windows(topo: Topology, nodes: Set[int], k: int,
             if r * c_clip > k and c_clip <= C:
                 shapes.append((r, c_clip, r * c_clip - k))
 
-    out: List[Tuple[int, ...]] = []
     for (r, c, clip) in shapes:
         # vectorized window sums over every (r0, c0) position at once
         s = (pad[r:, c:] - pad[:-r, c:] - pad[r:, :-c] + pad[:-r, :-c])
         for i, j in np.argwhere(s == r * c):
             block = grid[i:i + r, j:j + c].ravel()
-            cand = tuple(int(x) for x in (block[:-clip] if clip else block))
-            out.append(cand[:k] if len(cand) > k else cand)
-    return out
+            cand = tuple((block[:-clip] if clip else block).tolist())
+            yield cand[:k] if len(cand) > k else cand
 
 
 def bfs_blobs(adj: Dict[int, Sequence[int]], nodes: Set[int], k: int,

@@ -25,6 +25,7 @@ against them for both latency and TED quality.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -59,6 +60,11 @@ class EngineStats:
     uncacheable: int = 0
     exact_escalations: int = 0
     candidates_evaluated: int = 0
+    #: cache hits whose region canonicalizes through a different D4 frame
+    #: than the entry's encoder did — i.e. the stored and looked-up regions
+    #: are rotated/reflected (not translated) copies, exactly the lookups
+    #: the translation-only canonicalization would have missed
+    sym_decoded_hits: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -71,12 +77,14 @@ class MappingEngine:
 
     def __init__(self, topo: Topology, *, mapper: str = "hybrid",
                  cache_entries: int = 4096, max_candidates: int = 512,
-                 exact_max: int = EXACT_TED_MAX_NODES):
+                 exact_max: int = EXACT_TED_MAX_NODES,
+                 symmetry: bool = True):
         self.topo = topo
         self.adj: Dict[int, Tuple[int, ...]] = {
             n: tuple(sorted(ms)) for n, ms in topo._adj().items()}
         self.pool = batch.make_pool_arrays(topo)
-        self.regions = FreeRegions(topo, adj=self.adj)
+        self.symmetry = symmetry
+        self.regions = FreeRegions(topo, adj=self.adj, symmetry=symmetry)
         self.cache = TEDCache(cache_entries)
         self.stats = EngineStats()
         self.mappers: Dict[str, Mapper] = make_mappers()
@@ -87,6 +95,12 @@ class MappingEngine:
         self.max_candidates = max_candidates
         self.exact_max = exact_max
         self._wspur: Dict[str, np.ndarray] = {}
+        # interned whole-pool canonical keys -> small-int ids.  Bounded
+        # LRU (keys are multi-KB nested tuples at 1024 cores); ids come
+        # from a monotonic counter and are never reused, so eviction can
+        # only cost a memo hit, never alias two different pool shapes.
+        self._freekey_ids: "OrderedDict[Tuple, int]" = OrderedDict()
+        self._freekey_next = 0
 
     # -- hypervisor-driven invalidation hooks --------------------------------
     def notify_allocate(self, nodes: Iterable[int]) -> None:
@@ -105,6 +119,26 @@ class MappingEngine:
     @property
     def free_cores(self) -> FrozenSet[int]:
         return frozenset(self.regions.free)
+
+    FREEKEY_INTERN_MAX = 1024
+
+    def free_state_id(self) -> int:
+        """Small-int id of the canonical free-set *shape* (interned
+        :meth:`FreeRegions.free_key`).  Equal ids mean the free pools are
+        indistinguishable to any placement-feasibility question, so a
+        negative probe memoized under one id is valid under the other —
+        the scheduler's drain-queue memo compares these in O(1)."""
+        key = self.regions.free_key()
+        fid = self._freekey_ids.get(key)
+        if fid is None:
+            fid = self._freekey_next
+            self._freekey_next += 1
+            self._freekey_ids[key] = fid
+            while len(self._freekey_ids) > self.FREEKEY_INTERN_MAX:
+                self._freekey_ids.popitem(last=False)
+        else:
+            self._freekey_ids.move_to_end(key)
+        return fid
 
     # -- queries -------------------------------------------------------------
     def propose_candidates(self, k: int,
@@ -150,7 +184,12 @@ class MappingEngine:
         if k == 0 or k > len(free):
             return None
 
-        req_sig = component_signature(t_req, t_req.node_attrs, t_req._adj())
+        # the request keeps a translation-only canonical form: its node
+        # order feeds the batched scorer and the returned assignment, and
+        # requests recur with a fixed orientation (best_rect meshes), so
+        # region-side D4 normalization is where the symmetry hits live
+        req_sig = component_signature(t_req, t_req.node_attrs, t_req._adj(),
+                                      symmetry=False)
         cacheable = nm_id is not None and em_id is not None
         ctx = MapContext(
             topo=self.topo, adj=self.adj, pool=self.pool, t_req=t_req,
@@ -166,10 +205,28 @@ class MappingEngine:
                    if cacheable else None)
             result: Optional[MappingResult] = None
             if key is not None:
+                # A cross-orientation entry is only served when provably
+                # orientation-independent: a negative (feasibility is
+                # structural) or a perfect result (TED 0 is a global lower
+                # bound).  Heuristic quality is NOT D4-invariant (first-fit
+                # privileges an orientation; pool scoring does too once
+                # max_candidates truncates), so a suboptimal twin falls
+                # through to the frame-exact key, then to a fresh solve —
+                # a lucky orientation can never poison its rotations.
                 found, entry = self.cache.get(key)
+                servable = found and (entry is None or entry.ted == 0.0
+                                      or entry.transform == sig.transform)
+                if not servable:
+                    # frame-exact fallback: covers both a cross-frame
+                    # suboptimal primary and an LRU-evicted primary slot
+                    found, entry = self.cache.get(key + (sig.transform,))
                 if found:
                     self.stats.hits += 1
                     if entry is not None:
+                        # a hit whose frame differs from the encoder's is
+                        # one the translation-only keys would have missed
+                        if entry.transform != sig.transform:
+                            self.stats.sym_decoded_hits += 1
                         result = decode_result(entry, sig.order, req_sig.order)
                     evaluated += (entry.candidates_evaluated
                                   if entry is not None else 0)
@@ -181,8 +238,19 @@ class MappingEngine:
             result = strategy.map_component(ctx, comp)
             if key is not None:
                 self.stats.misses += 1
-                self.cache.put(key, None if result is None else
-                               encode_result(result, sig.order, req_sig.order))
+                enc = (None if result is None else
+                       encode_result(result, sig.order, req_sig.order,
+                                     transform=sig.transform))
+                if enc is None or enc.ted == 0.0:
+                    # serves every orientation — claim the frame-free key
+                    self.cache.put(key, enc)
+                else:
+                    # frame-bound quality: store under the frame-exact key;
+                    # also seed the frame-free slot if vacant so translated
+                    # (same-frame) twins hit in one lookup
+                    self.cache.put(key + (sig.transform,), enc)
+                    if not self.cache.get(key)[0]:
+                        self.cache.put(key, enc)
             else:
                 self.stats.uncacheable += 1
             if result is not None:
@@ -216,6 +284,7 @@ class MappingEngine:
             "cache_misses": s.misses,
             "uncacheable": s.uncacheable,
             "hit_rate": round(s.hit_rate, 4),
+            "sym_decoded_hits": s.sym_decoded_hits,
             "exact_escalations": s.exact_escalations,
             "candidates_evaluated": s.candidates_evaluated,
             "cache_entries": len(self.cache),
@@ -242,7 +311,8 @@ class MappingEngine:
         out = []
         for cid, comp in self._components(k, free_override):
             sig = (self.regions.signature(cid) if cid is not None
-                   else component_signature(self.topo, comp, self.adj))
+                   else component_signature(self.topo, comp, self.adj,
+                                            symmetry=self.symmetry))
             out.append((cid, comp, sig))
         return out
 

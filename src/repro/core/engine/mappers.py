@@ -104,7 +104,15 @@ def _edge_count_lb(ctx: MapContext, score: batch.PoolScore, c: int) -> float:
 
 
 class Mapper:
-    """Strategy protocol: best mapping of the request into one component."""
+    """Strategy protocol: best mapping of the request into one component.
+
+    No strategy's *result quality* is guaranteed invariant under
+    rotations/reflections of the component (first-fit privileges an
+    orientation outright; pool scoring does too once ``max_candidates``
+    truncates the pool), which is why the engine's D4 cache unification
+    only serves cross-orientation entries that are provably
+    orientation-independent — negatives and perfect (TED 0) results; see
+    ``MappingEngine.map_request``."""
 
     name = "abstract"
 
@@ -222,7 +230,12 @@ class ExactMapper(BipartiteMapper):
 class RectangleGreedyMapper(Mapper):
     """First-fit: an exact-shape rectangle window if one exists, else the
     *first proposed* candidate scored by one bipartite solve — no pool-wide
-    scoring, by design the cheapest (and least accurate) strategy."""
+    scoring, by design the cheapest (and least accurate) strategy.
+
+    Quality is sharply orientation-dependent (an exact-shape window exists
+    in one orientation of a strip but not its rotation) — the canonical
+    example of why the engine never serves a cross-orientation cache entry
+    whose TED is non-zero."""
 
     name = "rect"
 
@@ -235,12 +248,11 @@ class RectangleGreedyMapper(Mapper):
             k = len(ctx.req.order)
             # only windows of the request's exact shape — each is an
             # unclipped full rectangle, so no per-window shape re-check
-            windows = rect_windows(ctx.topo, set(comp), k,
-                                   shapes=[(shape[0], shape[1], 0)])
-            if windows:
+            cand = next(rect_windows(ctx.topo, set(comp), k,
+                                     shapes=[(shape[0], shape[1], 0)]), None)
+            if cand is not None:
                 # request canonical order and window order are both
                 # row-major: the identity permutation aligns them
-                cand = windows[0]
                 score = self._score(ctx, [cand])
                 ident = np.arange(k, dtype=np.int64)
                 cost = float(batch.induced_batch(

@@ -117,25 +117,22 @@ def hungarian(cost: np.ndarray) -> List[int]:
         minv = np.full(n + 1, INF)
         used = np.zeros(n + 1, dtype=bool)
         while True:
+            # one Dijkstra relaxation step, vectorized over the columns
+            # (same arithmetic and same first-minimum tie-break as the
+            # scalar loop — np.argmin returns the lowest index)
             used[j0] = True
             i0 = p[j0]
-            delta = INF
-            j1 = -1
-            for j in range(1, n + 1):
-                if not used[j]:
-                    cur = cost[i0 - 1, j - 1] - u[i0] - v[j]
-                    if cur < minv[j]:
-                        minv[j] = cur
-                        way[j] = j0
-                    if minv[j] < delta:
-                        delta = minv[j]
-                        j1 = j
-            for j in range(n + 1):
-                if used[j]:
-                    u[p[j]] += delta
-                    v[j] -= delta
-                else:
-                    minv[j] -= delta
+            cur = cost[i0 - 1, :] - u[i0] - v[1:]
+            free = ~used[1:]
+            improve = free & (cur < minv[1:])
+            minv[1:][improve] = cur[improve]
+            way[1:][improve] = j0
+            masked = np.where(free, minv[1:], INF)
+            j1 = int(np.argmin(masked)) + 1
+            delta = float(masked[j1 - 1])
+            np.add.at(u, p[used], delta)
+            v[used] -= delta
+            minv[~used] -= delta
             j0 = j1
             if p[j0] == 0:
                 break

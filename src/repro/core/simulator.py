@@ -30,6 +30,8 @@ import dataclasses
 import math
 from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
 from .topology import Topology, mesh_2d
 from .vchunk import (PageTable, PageTLB, RangeTLB, RangeTranslationTable,
                      RTTEntry, TLBStats)
@@ -304,18 +306,20 @@ def noc_transfer_cycles(topo: Topology, flow: Flow, hw: HWConfig,
 
 
 def avg_pairwise_hops(topo: Topology, cores: Sequence[int]) -> float:
-    """Mean NoC distance inside an allocation — compactness of the mapping."""
+    """Mean NoC distance inside an allocation — compactness of the mapping.
+
+    Vectorized (all-pairs |Δrow| + |Δcol| as one numpy reduction): the sums
+    are integer-exact, so the value is identical to the reference double
+    loop at any scale.  O(k^2) arithmetic without the Python-loop constant.
+    """
     cs = list(cores)
-    if len(cs) < 2:
+    k = len(cs)
+    if k < 2:
         return 0.0
     coord = topo.coords
-    tot = n = 0
-    for i in range(len(cs)):
-        for j in range(i + 1, len(cs)):
-            a, b = coord[cs[i]], coord[cs[j]]
-            tot += abs(a[0] - b[0]) + abs(a[1] - b[1])
-            n += 1
-    return tot / n
+    pts = np.array([coord[c] for c in cs], dtype=np.int64)
+    tot = int(np.abs(pts[:, None, :] - pts[None, :, :]).sum()) // 2
+    return tot / (k * (k - 1) // 2)
 
 
 # ---------------------------------------------------------------------------
@@ -415,6 +419,150 @@ def tenant_flows(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
     return _stage_flows(graph, layer_core, list(cores), owner)
 
 
+@dataclasses.dataclass
+class PipelineSkeleton:
+    """The placement-dependent half of :func:`simulate_pipeline`.
+
+    Everything here is a function of (graph, cores, topo, hw, comm) only —
+    layer partition, per-stage compute/weight totals, the tenant's own NoC
+    flows and their DOR paths.  None of it depends on co-tenant traffic
+    (``external_link_loads``/``external_flows``) or ``hbm_concurrency``, so
+    the scheduler computes it once per *placement* and recombines only the
+    contention/HBM terms per scoring pass (:func:`rescore_contention`).
+    """
+    graph: WorkloadGraph
+    topo: Topology
+    hw: HWConfig
+    comm: str
+    owner: int
+    translation: str
+    tlb_entries: int
+    weight_streaming: bool
+    tdm_physical: Optional[int]
+    virtualization_overhead: float
+    n: int
+    core_of_stage: List[int]
+    comp: List[int]                     # per-stage compute cycles
+    wbytes: List[int]                   # per-stage weight bytes
+    flows: List[Flow]                   # own NoC flows (stage boundaries)
+    paths: List[List[int]]              # DOR path of each own flow
+
+    @property
+    def noc_flows(self) -> List[Flow]:
+        """The flows this tenant injects (what co-residents see)."""
+        return self.flows
+
+
+def pipeline_skeleton(
+    graph: WorkloadGraph,
+    cores: Sequence[int],
+    topo: Topology,
+    hw: HWConfig,
+    *,
+    comm: str = "dataflow",
+    owner: int = 1,
+    translation: str = "range",
+    tlb_entries: int = 4,
+    weight_streaming: bool = False,
+    tdm_physical: Optional[int] = None,
+    virtualization_overhead: float = 0.0,
+) -> PipelineSkeleton:
+    """Build the contention-independent skeleton of a pipeline run:
+    O(layers + flows x path length), paid once per placement."""
+    n = len(cores)
+    layer_core = partition_layers(graph, n,
+                                  cost=lambda l: layer_compute_cycles(l, hw))
+    core_of_stage = list(cores)
+    comp = [0] * n
+    wbytes = [0] * n
+    for i, layer in enumerate(graph.layers):
+        comp[layer_core[i]] += layer_compute_cycles(layer, hw)
+        wbytes[layer_core[i]] += layer.weight_bytes
+    flows = _stage_flows(graph, layer_core, core_of_stage, owner)
+    return PipelineSkeleton(
+        graph=graph, topo=topo, hw=hw, comm=comm, owner=owner,
+        translation=translation, tlb_entries=tlb_entries,
+        weight_streaming=weight_streaming, tdm_physical=tdm_physical,
+        virtualization_overhead=virtualization_overhead, n=n,
+        core_of_stage=core_of_stage, comp=comp, wbytes=wbytes, flows=flows,
+        paths=flow_paths(topo, flows))
+
+
+def finish_pipeline(
+    sk: PipelineSkeleton,
+    *,
+    external_flows: Sequence[Flow] = (),
+    external_link_loads: Optional[Dict[Tuple[int, int], float]] = None,
+    hbm_concurrency: int = 1,
+) -> RunReport:
+    """Recombine a pipeline skeleton with the contention/HBM context.
+
+    O(own flows x path length + stages).  ``simulate_pipeline`` is exactly
+    ``finish_pipeline(pipeline_skeleton(...))``, so a rescore through a
+    cached skeleton is bit-identical to a full re-simulation by
+    construction — there is one arithmetic path, not two.
+    """
+    graph, topo, hw, comm = sk.graph, sk.topo, sk.hw, sk.comm
+    n, core_of_stage, flows = sk.n, sk.core_of_stage, sk.flows
+    if external_link_loads is not None:
+        factors = link_contention(sk.paths, flows,
+                                  external_loads=external_link_loads)
+    else:
+        all_flows = list(flows) + list(external_flows)
+        paths = flow_paths(topo, all_flows)
+        factors = link_contention(paths, all_flows)
+
+    comm_in: Dict[int, int] = {c: 0 for c in core_of_stage}
+    comm_out: Dict[int, int] = {c: 0 for c in core_of_stage}
+    for f, fac in zip(flows, factors[: len(flows)]):
+        if comm == "uvm":
+            bw = hw.hbm_bytes_per_cycle / max(hbm_concurrency, 1)
+            cyc = int(2 * f.bytes_per_iter / bw) + hw.uvm_sync_cycles
+        else:
+            cyc = noc_transfer_cycles(topo, f, hw, contention=fac)
+        comm_out[f.src] = comm_out.get(f.src, 0) + cyc
+        comm_in[f.dst] = comm_in.get(f.dst, 0) + cyc
+
+    stages: List[StageReport] = []
+    for s in range(n):
+        c = core_of_stage[s]
+        dma = 0
+        if sk.weight_streaming and sk.wbytes[s] > 0:
+            r = simulate_weight_dma(sk.wbytes[s], hw,
+                                    translation=sk.translation,
+                                    tlb_entries=sk.tlb_entries,
+                                    bw_share=1.0 / (n * hbm_concurrency))
+            dma = r.total_cycles
+        stages.append(StageReport(core=c, compute_cycles=sk.comp[s],
+                                  comm_cycles=comm_in[c] + comm_out[c],
+                                  dma_cycles=dma))
+
+    if comm == "uvm":
+        per_stage = [st.compute_cycles + st.comm_cycles + st.dma_cycles
+                     for st in stages]
+    else:
+        # dataflow comm overlaps with compute (§6.2.3)
+        per_stage = [max(st.compute_cycles, st.comm_cycles) + st.dma_cycles
+                     for st in stages]
+    if sk.tdm_physical is not None and sk.tdm_physical < n:
+        loads = tdm_pack(per_stage, sk.tdm_physical)
+        interval = max(loads) + hw.tdm_switch_cycles
+    else:
+        interval = max(per_stage) if per_stage else 1
+    interval = int(interval * (1.0 + sk.virtualization_overhead))
+    latency = sum(per_stage)
+
+    warmup = math.ceil(graph.total_weight_bytes /
+                       (hw.hbm_bytes_per_cycle / max(hbm_concurrency, 1)))
+    ideal = sum(sk.comp) / max(n, 1)
+    bubble = 1.0 - (ideal / interval) if interval else 0.0
+    return RunReport(workload=graph.name, mode=f"pipeline-{comm}",
+                     interval_cycles=max(interval, 1), latency_cycles=latency,
+                     warmup_cycles=warmup, stages=stages,
+                     fps=hw.freq_hz / max(interval, 1),
+                     bubble_fraction=max(0.0, min(1.0, bubble)))
+
+
 def simulate_pipeline(
     graph: WorkloadGraph,
     cores: Sequence[int],                # physical core ids, pipeline order
@@ -441,74 +589,139 @@ def simulate_pipeline(
     path).  The two are bit-identical because link loads are exact integer
     sums; external flows only ever influence the result through the loads
     on this tenant's own links.
+
+    Implemented as :func:`pipeline_skeleton` + :func:`finish_pipeline`, so
+    the scheduler's split-RunReport rescoring (skeleton cached per
+    placement) shares this exact arithmetic path.
     """
+    sk = pipeline_skeleton(
+        graph, cores, topo, hw, comm=comm, owner=owner,
+        translation=translation, tlb_entries=tlb_entries,
+        weight_streaming=weight_streaming, tdm_physical=tdm_physical,
+        virtualization_overhead=virtualization_overhead)
+    return finish_pipeline(sk, external_flows=external_flows,
+                           external_link_loads=external_link_loads,
+                           hbm_concurrency=hbm_concurrency)
+
+
+@dataclasses.dataclass
+class TensorSkeleton:
+    """The placement-dependent half of :func:`simulate_tensor_parallel`:
+    total compute, ring geometry (flows + paths + mean hops) and the
+    reduced layers' output sizes.  Independent of co-tenant loads and
+    ``hbm_concurrency`` — see :class:`PipelineSkeleton`."""
+    graph: WorkloadGraph
+    topo: Topology
+    hw: HWConfig
+    comm: str
+    owner: int
+    tdm_physical: Optional[int]
+    virtualization_overhead: float
+    overlap: float
+    n: int
+    comp: int                           # total compute cycles, all layers
+    hops: float                         # avg pairwise hops of the placement
+    ring: List[Flow]                    # ring all-reduce flows
+    ring_paths: List[List[int]]         # DOR path of each ring flow
+    reduce_out_bytes: List[int]         # out_bytes of each reduced layer
+
+    @property
+    def noc_flows(self) -> List[Flow]:
+        """The flows this tenant injects (what co-residents see)."""
+        return self.ring
+
+
+def tensor_skeleton(
+    graph: WorkloadGraph,
+    cores: Sequence[int],
+    topo: Topology,
+    hw: HWConfig,
+    *,
+    comm: str = "dataflow",
+    owner: int = 1,
+    tdm_physical: Optional[int] = None,
+    virtualization_overhead: float = 0.0,
+    overlap: float = 0.7,
+) -> TensorSkeleton:
+    """Build the contention-independent skeleton of a tensor-parallel run:
+    O(layers + k^2), paid once per placement (the per-layer compute sum and
+    the all-pairs hop count are the expensive terms a rescore skips)."""
     n = len(cores)
-    layer_core = partition_layers(graph, n,
-                                  cost=lambda l: layer_compute_cycles(l, hw))
-    core_of_stage = list(cores)
+    comp = sum(layer_compute_cycles(l, hw, cores=n) for l in graph.layers)
+    ring = _ring_flows(graph, cores, owner)
+    return TensorSkeleton(
+        graph=graph, topo=topo, hw=hw, comm=comm, owner=owner,
+        tdm_physical=tdm_physical,
+        virtualization_overhead=virtualization_overhead, overlap=overlap,
+        n=n, comp=comp, hops=avg_pairwise_hops(topo, cores), ring=ring,
+        ring_paths=flow_paths(topo, ring),
+        reduce_out_bytes=[l.out_bytes for l in _reduce_layers(graph)])
 
-    comp = [0] * n
-    wbytes = [0] * n
-    for i, layer in enumerate(graph.layers):
-        comp[layer_core[i]] += layer_compute_cycles(layer, hw)
-        wbytes[layer_core[i]] += layer.weight_bytes
 
-    flows = _stage_flows(graph, layer_core, core_of_stage, owner)
-    if external_link_loads is not None:
-        paths = flow_paths(topo, flows)
-        factors = link_contention(paths, flows,
-                                  external_loads=external_link_loads)
-    else:
-        all_flows = list(flows) + list(external_flows)
-        paths = flow_paths(topo, all_flows)
-        factors = link_contention(paths, all_flows)
+def finish_tensor(
+    sk: TensorSkeleton,
+    *,
+    external_flows: Sequence[Flow] = (),
+    external_link_loads: Optional[Dict[Tuple[int, int], float]] = None,
+    hbm_concurrency: int = 1,
+) -> RunReport:
+    """Recombine a tensor skeleton with the contention/HBM context:
+    O(ring flows x path length + reduced layers).  One arithmetic path
+    with :func:`simulate_tensor_parallel` — see :func:`finish_pipeline`.
+    """
+    graph, topo, hw, comm = sk.graph, sk.topo, sk.hw, sk.comm
+    n, comp, hops = sk.n, sk.comp, sk.hops
 
-    comm_in: Dict[int, int] = {c: 0 for c in core_of_stage}
-    comm_out: Dict[int, int] = {c: 0 for c in core_of_stage}
-    for f, fac in zip(flows, factors[: len(flows)]):
+    # cross-tenant contention on the ring links
+    contention = 1.0
+    if comm != "uvm" and (external_flows or external_link_loads is not None):
+        ring = sk.ring
+        if ring:
+            if external_link_loads is not None:
+                factors = link_contention(
+                    sk.ring_paths, ring,
+                    external_loads=external_link_loads)
+            else:
+                all_flows = ring + list(external_flows)
+                factors = link_contention(flow_paths(topo, all_flows),
+                                          all_flows)
+            contention = sum(factors[: len(ring)]) / len(ring)
+
+    ar_cycles = 0
+    for out_bytes in sk.reduce_out_bytes:
+        vol = 2 * out_bytes * (n - 1) / max(n, 1)  # ring all-reduce volume
         if comm == "uvm":
             bw = hw.hbm_bytes_per_cycle / max(hbm_concurrency, 1)
-            cyc = int(2 * f.bytes_per_iter / bw) + hw.uvm_sync_cycles
+            # every core writes its partial and reads the sum: n writes + n
+            # reads of the shard, serialized on shared HBM + sync barrier
+            ar_cycles += int(2 * out_bytes * n / bw) + hw.uvm_sync_cycles
         else:
-            cyc = noc_transfer_cycles(topo, f, hw, contention=fac)
-        comm_out[f.src] = comm_out.get(f.src, 0) + cyc
-        comm_in[f.dst] = comm_in.get(f.dst, 0) + cyc
+            # ring steps between logically-adjacent, physically-distant cores
+            # occupy `hops` links each -> serialization scales with avg hops
+            ser = vol / hw.noc_link_bytes_per_cycle * max(hops, 1.0) * \
+                contention
+            ar_cycles += int(ser + 2 * (n - 1) * hops * hw.noc_hop_cycles)
 
-    stages: List[StageReport] = []
-    for s in range(n):
-        c = core_of_stage[s]
-        dma = 0
-        if weight_streaming and wbytes[s] > 0:
-            r = simulate_weight_dma(wbytes[s], hw, translation=translation,
-                                    tlb_entries=tlb_entries,
-                                    bw_share=1.0 / (n * hbm_concurrency))
-            dma = r.total_cycles
-        stages.append(StageReport(core=c, compute_cycles=comp[s],
-                                  comm_cycles=comm_in[c] + comm_out[c],
-                                  dma_cycles=dma))
-
+    if sk.tdm_physical is not None and sk.tdm_physical < n:
+        # ceil(n/P) tensor slices run serially on the busiest physical core,
+        # and co-located slices also serialize their NoC injections
+        slices = -(-n // sk.tdm_physical)
+        comp = comp * slices + hw.tdm_switch_cycles
+        ar_cycles *= slices
     if comm == "uvm":
-        per_stage = [st.compute_cycles + st.comm_cycles + st.dma_cycles
-                     for st in stages]
+        interval = comp + ar_cycles
     else:
-        # dataflow comm overlaps with compute (§6.2.3)
-        per_stage = [max(st.compute_cycles, st.comm_cycles) + st.dma_cycles
-                     for st in stages]
-    if tdm_physical is not None and tdm_physical < n:
-        loads = tdm_pack(per_stage, tdm_physical)
-        interval = max(loads) + hw.tdm_switch_cycles
-    else:
-        interval = max(per_stage) if per_stage else 1
-    interval = int(interval * (1.0 + virtualization_overhead))
-    latency = sum(per_stage)
+        exposed = int(ar_cycles * (1.0 - sk.overlap))
+        interval = comp + exposed
+    interval = int(interval * (1.0 + sk.virtualization_overhead))
 
     warmup = math.ceil(graph.total_weight_bytes /
                        (hw.hbm_bytes_per_cycle / max(hbm_concurrency, 1)))
-    ideal = sum(comp) / max(n, 1)
-    bubble = 1.0 - (ideal / interval) if interval else 0.0
-    return RunReport(workload=graph.name, mode=f"pipeline-{comm}",
-                     interval_cycles=max(interval, 1), latency_cycles=latency,
-                     warmup_cycles=warmup, stages=stages,
+    bubble = 1.0 - comp / max(interval, 1)
+    return RunReport(workload=graph.name, mode=f"tensor-{comm}",
+                     interval_cycles=max(interval, 1),
+                     latency_cycles=max(interval, 1),
+                     warmup_cycles=warmup, stages=[],
                      fps=hw.freq_hz / max(interval, 1),
                      bubble_fraction=max(0.0, min(1.0, bubble)))
 
@@ -542,63 +755,17 @@ def simulate_tensor_parallel(
     ``external_flows`` list: the contention term — which includes the
     ring's *self*-contention — is only computed when co-tenant traffic
     exists, so the two paths stay bit-identical.
+
+    Implemented as :func:`tensor_skeleton` + :func:`finish_tensor` — the
+    scheduler's split-RunReport rescoring shares this arithmetic path.
     """
-    n = len(cores)
-    comp = sum(layer_compute_cycles(l, hw, cores=n) for l in graph.layers)
-    hops = avg_pairwise_hops(topo, cores)
-
-    # cross-tenant contention on the ring links
-    contention = 1.0
-    if comm != "uvm" and (external_flows or external_link_loads is not None):
-        ring = _ring_flows(graph, cores, owner)
-        if ring:
-            if external_link_loads is not None:
-                factors = link_contention(
-                    flow_paths(topo, ring), ring,
-                    external_loads=external_link_loads)
-            else:
-                all_flows = ring + list(external_flows)
-                factors = link_contention(flow_paths(topo, all_flows),
-                                          all_flows)
-            contention = sum(factors[: len(ring)]) / len(ring)
-
-    ar_cycles = 0
-    for l in _reduce_layers(graph):
-        vol = 2 * l.out_bytes * (n - 1) / max(n, 1)  # ring all-reduce volume
-        if comm == "uvm":
-            bw = hw.hbm_bytes_per_cycle / max(hbm_concurrency, 1)
-            # every core writes its partial and reads the sum: n writes + n
-            # reads of the shard, serialized on shared HBM + sync barrier
-            ar_cycles += int(2 * l.out_bytes * n / bw) + hw.uvm_sync_cycles
-        else:
-            # ring steps between logically-adjacent, physically-distant cores
-            # occupy `hops` links each -> serialization scales with avg hops
-            ser = vol / hw.noc_link_bytes_per_cycle * max(hops, 1.0) * \
-                contention
-            ar_cycles += int(ser + 2 * (n - 1) * hops * hw.noc_hop_cycles)
-
-    if tdm_physical is not None and tdm_physical < n:
-        # ceil(n/P) tensor slices run serially on the busiest physical core,
-        # and co-located slices also serialize their NoC injections
-        slices = -(-n // tdm_physical)
-        comp = comp * slices + hw.tdm_switch_cycles
-        ar_cycles *= slices
-    if comm == "uvm":
-        interval = comp + ar_cycles
-    else:
-        exposed = int(ar_cycles * (1.0 - overlap))
-        interval = comp + exposed
-    interval = int(interval * (1.0 + virtualization_overhead))
-
-    warmup = math.ceil(graph.total_weight_bytes /
-                       (hw.hbm_bytes_per_cycle / max(hbm_concurrency, 1)))
-    bubble = 1.0 - comp / max(interval, 1)
-    return RunReport(workload=graph.name, mode=f"tensor-{comm}",
-                     interval_cycles=max(interval, 1),
-                     latency_cycles=max(interval, 1),
-                     warmup_cycles=warmup, stages=[],
-                     fps=hw.freq_hz / max(interval, 1),
-                     bubble_fraction=max(0.0, min(1.0, bubble)))
+    sk = tensor_skeleton(
+        graph, cores, topo, hw, comm=comm, owner=owner,
+        tdm_physical=tdm_physical,
+        virtualization_overhead=virtualization_overhead, overlap=overlap)
+    return finish_tensor(sk, external_flows=external_flows,
+                         external_link_loads=external_link_loads,
+                         hbm_concurrency=hbm_concurrency)
 
 
 def simulate(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
@@ -611,6 +778,38 @@ def simulate(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
         kw.pop("tlb_entries", None)
         return simulate_tensor_parallel(graph, cores, topo, hw, **kw)
     return simulate_pipeline(graph, cores, topo, hw, **kw)
+
+
+def make_skeleton(graph: WorkloadGraph, cores: Sequence[int], topo: Topology,
+                  hw: HWConfig, **kw):
+    """Placement-dependent half of :func:`simulate`, dispatched like it
+    (transformers -> :func:`tensor_skeleton`, CNNs ->
+    :func:`pipeline_skeleton`).  Pair with :func:`rescore_contention`."""
+    if is_tensor_parallel(graph):
+        kw.pop("weight_streaming", None)
+        kw.pop("translation", None)
+        kw.pop("tlb_entries", None)
+        return tensor_skeleton(graph, cores, topo, hw, **kw)
+    return pipeline_skeleton(graph, cores, topo, hw, **kw)
+
+
+def rescore_contention(sk, *, external_flows: Sequence[Flow] = (),
+                       external_link_loads: Optional[
+                           Dict[Tuple[int, int], float]] = None,
+                       hbm_concurrency: int = 1) -> RunReport:
+    """Recombine a cached skeleton with fresh contention/HBM context.
+
+    ``rescore_contention(make_skeleton(g, c, t, hw, **pkw), **ckw)`` is
+    bit-identical to ``simulate(g, c, t, hw, **pkw, **ckw)`` — both are the
+    same two function calls.  The split exists so the scheduler can keep
+    the skeleton across scoring passes whose placement didn't change and
+    pay only the O(own flows + reduced layers) recombination.
+    """
+    finish = (finish_tensor if isinstance(sk, TensorSkeleton)
+              else finish_pipeline)
+    return finish(sk, external_flows=external_flows,
+                  external_link_loads=external_link_loads,
+                  hbm_concurrency=hbm_concurrency)
 
 
 # ---------------------------------------------------------------------------

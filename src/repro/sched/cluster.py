@@ -101,6 +101,10 @@ class ClusterMetrics:
     n_rejected: int = 0
     n_migrations: int = 0
     n_failed_cores: int = 0
+    # placement attempts skipped because the spec's size class last failed
+    # against an identical free pool (drain-queue probe memoization)
+    n_probe_skips: int = 0
+    n_events: int = 0                 # events processed by the run loop
     util_integral: float = 0.0        # ∫ utilization dt
     horizon_s: float = 0.0
     tenant_iterations: Dict[int, float] = dataclasses.field(
@@ -176,6 +180,8 @@ class ClusterMetrics:
         }
         if self.n_failed_cores:
             out["failed_cores"] = self.n_failed_cores
+        if self.n_probe_skips:
+            out["probe_skips"] = self.n_probe_skips
         if self.engine_counters:
             out["engine"] = dict(self.engine_counters)
         if self.ledger_counters:
@@ -196,7 +202,8 @@ class ClusterScheduler:
                  epoch_s: float = 2.0,
                  defrag: bool = True,
                  max_migrations_per_event: int = 2,
-                 rescore: str = "ledger"):
+                 rescore: str = "ledger",
+                 probe_memo: Optional[bool] = None):
         if rescore not in RESCORE_MODES:
             raise ValueError(
                 f"rescore must be one of {RESCORE_MODES}, got {rescore!r}")
@@ -207,6 +214,11 @@ class ClusterScheduler:
         self.defrag = defrag
         self.max_migrations_per_event = max_migrations_per_event
         self.rescore_mode = rescore
+        # negative-probe memoization rides the fast path; the oracle mode
+        # re-probes everything so the CI gate pins the memo's exactness
+        # (trajectories must stay bit-identical between the two)
+        self.probe_memo = (rescore == "ledger") if probe_memo is None \
+            else probe_memo
         self.ledger: Optional[InterferenceLedger] = (
             InterferenceLedger(self.topo) if rescore == "ledger" else None)
 
@@ -215,21 +227,49 @@ class ClusterScheduler:
         self._waiting: List[Tuple[TenantSpec, float]] = []
         self._scores: Dict[int, RunReport] = {}
         self._flows: Dict[int, List[Flow]] = {}
+        # split-RunReport cache (ledger mode): per-tenant placement skeleton
+        # (compute, DMA, own-flow paths), invalidated when the placement
+        # changes; a dirty rescore recombines only the contention/HBM terms
+        self._skeletons: Dict[int, object] = {}
+        # negative-probe memo: size-class key -> (free-state token, defrag
+        # attempted, placement version at failure) of the last full failure
+        self._probe_memo: Dict[Tuple, Tuple] = {}
+        self._placement_version = 0
+        self._free_token_cache: Optional[Tuple[int, Tuple]] = None
         self._dirty = True                # oracle-mode recompute flag
         self._last_t = 0.0
         self.metrics = ClusterMetrics(policy=policy.name,
                                       rescore_mode=rescore)
 
     # -- scoring -----------------------------------------------------------
+    def _skeleton(self, rt: ResidentTenant):
+        """The tenant's placement skeleton (ledger mode only): the
+        compute/DMA/own-flow-path half of a simulation, built once per
+        placement and recombined with fresh contention context per scoring
+        pass (:func:`repro.core.simulator.rescore_contention`)."""
+        sk = self._skeletons.get(rt.spec.tid)
+        if sk is None:
+            p = rt.placement
+            sk = S.make_skeleton(rt.graph, list(p.cores), self.topo, self.hw,
+                                 comm=p.comm, owner=rt.spec.tid,
+                                 tdm_physical=p.tdm_physical)
+            self._skeletons[rt.spec.tid] = sk
+        return sk
+
     def _tenant_flows(self, rt: ResidentTenant) -> List[Flow]:
         """The NoC flows this tenant injects per iteration (cached until
-        the placement changes).  O(workload layers) on a miss."""
+        the placement changes).  O(workload layers) on a miss; in ledger
+        mode the flows come from the placement skeleton (same arithmetic
+        as :func:`repro.core.simulator.tenant_flows`, computed once)."""
         flows = self._flows.get(rt.spec.tid)
         if flows is None:
             if rt.placement.comm == "dataflow":
-                flows = S.tenant_flows(rt.graph, rt.placement.cores,
-                                       self.topo, self.hw,
-                                       owner=rt.spec.tid)
+                if self.ledger is not None:
+                    flows = list(self._skeleton(rt).noc_flows)
+                else:
+                    flows = S.tenant_flows(rt.graph, rt.placement.cores,
+                                           self.topo, self.hw,
+                                           owner=rt.spec.tid)
             else:
                 flows = []   # UVM traffic rides HBM, not the NoC
             self._flows[rt.spec.tid] = flows
@@ -240,25 +280,27 @@ class ClusterScheduler:
         """One simulator call for one resident.  The interference context
         comes either from the ledger (pre-aggregated per-link loads,
         O(own flows)) or — oracle mode — from re-listing every
-        co-resident's flows (O(residents x flows))."""
+        co-resident's flows (O(residents x flows)).  In ledger mode the
+        placement-dependent skeleton is cached on the resident, so only
+        the contention/HBM recombination is paid here — bit-identical to
+        the full simulation (one shared arithmetic path)."""
         p = rt.placement
         tid = rt.spec.tid
-        kwargs = dict(comm=p.comm, owner=tid,
-                      tdm_physical=p.tdm_physical,
-                      hbm_concurrency=max(hbm_clients, 1))
-        if p.comm == "dataflow":
-            if self.ledger is None:
+        kwargs = dict(hbm_concurrency=max(hbm_clients, 1))
+        if self.ledger is None:
+            if p.comm == "dataflow":
                 kwargs["external_flows"] = [
                     f for other, r2 in self._residents.items()
                     if other != tid for f in self._tenant_flows(r2)]
-            elif self.ledger.has_external(tid):
-                # pass the (possibly empty) aggregate exactly when the
-                # oracle's flow list would be non-empty — the tensor
-                # model's contention switch keys on that, not on loads
-                kwargs["external_link_loads"] = \
-                    self.ledger.external_loads(tid)
-        return S.simulate(rt.graph, list(p.cores), self.topo, self.hw,
-                          **kwargs)
+            return S.simulate(rt.graph, list(p.cores), self.topo, self.hw,
+                              comm=p.comm, owner=tid,
+                              tdm_physical=p.tdm_physical, **kwargs)
+        if p.comm == "dataflow" and self.ledger.has_external(tid):
+            # pass the (possibly empty) aggregate exactly when the
+            # oracle's flow list would be non-empty — the tensor
+            # model's contention switch keys on that, not on loads
+            kwargs["external_link_loads"] = self.ledger.external_loads(tid)
+        return S.rescore_contention(self._skeleton(rt), **kwargs)
 
     def _rescore(self) -> None:
         """Reference oracle: score every resident against every other —
@@ -302,6 +344,7 @@ class ClusterScheduler:
 
     # -- lifecycle hooks (ledger/oracle invalidation) ----------------------
     def _tenant_admitted(self, rt: ResidentTenant) -> None:
+        self._placement_version += 1
         if self.ledger is not None:
             self.ledger.add(rt.spec.tid, self._tenant_flows(rt),
                             hbm_client=rt.placement.hbm_client)
@@ -309,8 +352,10 @@ class ClusterScheduler:
             self._dirty = True
 
     def _tenant_departed(self, tid: int) -> None:
+        self._placement_version += 1
         self._flows.pop(tid, None)
         self._scores.pop(tid, None)
+        self._skeletons.pop(tid, None)
         if self.ledger is not None:
             self.ledger.remove(tid)
         else:
@@ -318,13 +363,71 @@ class ClusterScheduler:
 
     def _tenant_moved(self, rt: ResidentTenant) -> None:
         """Placement changed in place (defrag / failure migration): refresh
-        the flow cache and swap the ledger footprint."""
+        the flow and skeleton caches and swap the ledger footprint."""
+        self._placement_version += 1
         self._flows.pop(rt.spec.tid, None)
+        self._skeletons.pop(rt.spec.tid, None)
         if self.ledger is not None:
             self.ledger.update(rt.spec.tid, self._tenant_flows(rt),
                                hbm_client=rt.placement.hbm_client)
         else:
             self._dirty = True
+
+    # -- negative-probe memoization -----------------------------------------
+    @staticmethod
+    def _spec_key(spec: TenantSpec) -> Tuple:
+        """The size class of a placement attempt: everything ``allocate``
+        reads from a spec (model identity is throughput-, not
+        placement-relevant)."""
+        return (spec.n_cores, spec.memory_bytes, spec.bandwidth_cap)
+
+    def _free_token(self):
+        """Current free-pool identity for the probe memo: the policy's
+        canonical token (vNPU: free-region shape + buddy multiset) or the
+        scheduler's own placement-mutation counter as the exact fallback.
+
+        Cached per placement version — every mutation that could change
+        the policy token flows through this scheduler and bumps the
+        version — so a drain pass over an unchanged pool costs one token
+        derivation total, not one per queued spec."""
+        cached = self._free_token_cache
+        if cached is not None and cached[0] == self._placement_version:
+            return cached[1]
+        tok = self.policy.free_state_token()
+        if tok is None:
+            tok = ("v", self._placement_version)
+        self._free_token_cache = (self._placement_version, tok)
+        return tok
+
+    def _probe_skip(self, spec: TenantSpec, defrag_now: bool) -> bool:
+        """True when ``spec``'s size class is recorded as failing against
+        the *current* pool, so re-attempting is provably pointless.
+
+        A failure recorded with a defrag attempt covers plain retries too
+        (its attempt set is a superset); a plain failure never excuses a
+        defrag-eligible attempt — defragmentation depends on the resident
+        arrangement, so those skips additionally require the placement
+        version to be unchanged."""
+        entry = self._probe_memo.get(self._spec_key(spec))
+        if entry is None or entry[0] != self._free_token():
+            return False
+        if not defrag_now:
+            return True
+        return entry[1] and entry[2] == self._placement_version
+
+    def _record_probe_failure(self, spec: TenantSpec,
+                              defrag_covered: bool) -> None:
+        """Record a fully-failed placement attempt (post-attempt state:
+        a failed defrag may still have migrated residents, so the token is
+        read *after* the attempts).
+
+        ``defrag_covered`` must only be True when the defrag attempt made
+        *no* moves: a defrag that migrated residents and still failed has
+        made progress (it is bounded per event), and the next head retry
+        could migrate further and succeed — suppressing it would diverge
+        from the memo-less schedule."""
+        self._probe_memo[self._spec_key(spec)] = (
+            self._free_token(), defrag_covered, self._placement_version)
 
     # -- time accounting ---------------------------------------------------
     def _advance(self, now: float) -> None:
@@ -412,6 +515,7 @@ class ClusterScheduler:
         stand-in for a stranded tenant awaiting operator action."""
         cores = tuple(int(c) for c in cores)
         self.policy.mark_failed(cores)
+        self._placement_version += 1   # quarantine changes what can place
         # count each physical core's death once, however many failure
         # events name it (the policy's quarantine is idempotent too)
         newly_dead = set(cores) - self._failed_cores
@@ -444,19 +548,34 @@ class ClusterScheduler:
 
     def _drain_queue(self, now: float, evq: EventQueue) -> None:
         """Admit as many waiting tenants as now fit (FIFO with backfill);
-        one defrag attempt on behalf of the queue head."""
+        one defrag attempt on behalf of the queue head.
+
+        With ``probe_memo`` on, a queued spec whose size class last failed
+        against an identical free pool is skipped outright — a drain pass
+        over an unchanged pool costs O(queue) token comparisons instead of
+        O(queue) mapping solves, with identical admissions (negative
+        probes are pure functions of the pool, pinned by the CI gate)."""
         self._expire_waiting(now)
         still: List[Tuple[TenantSpec, float]] = []
         for i, (spec, enq) in enumerate(self._waiting):
+            defrag_now = i == 0 and self.defrag
+            if self.probe_memo and self._probe_skip(spec, defrag_now):
+                self.metrics.n_probe_skips += 1
+                still.append((spec, enq))
+                continue
+            v0 = self._placement_version
             if self._try_place(spec, now, evq, strict=True):
                 continue
-            if i == 0 and self.defrag:
+            if defrag_now:
                 # one defrag attempt on behalf of the queue head
                 if self._defrag_for(spec, now) and \
                         self._try_place(spec, now, evq, strict=True):
                     continue
             if self._try_place(spec, now, evq):   # relaxed (fragmented ok)
                 continue
+            if self.probe_memo:
+                self._record_probe_failure(
+                    spec, defrag_now and self._placement_version == v0)
             still.append((spec, enq))
         self._waiting = still
 
@@ -492,20 +611,36 @@ class ClusterScheduler:
         while evq:
             ev = evq.pop()
             now = ev.time
+            self.metrics.n_events += 1
             self._advance(now)
             if ev.kind == ARRIVAL:
                 self.metrics.n_arrived += 1
                 spec = ev.spec
                 # strict (connected) first; defragment; only then accept a
-                # fragmented placement — locality is worth one defrag pass
-                placed = self._try_place(spec, now, evq, strict=True)
-                if not placed and self.defrag and not self._waiting:
-                    if self._defrag_for(spec, now):
-                        placed = self._try_place(spec, now, evq, strict=True)
-                if not placed:
-                    placed = self._try_place(spec, now, evq)
-                if not placed:
+                # fragmented placement — locality is worth one defrag pass.
+                # The probe memo short-circuits the whole cascade when this
+                # size class is recorded as failing against this very pool
+                # (common once a big ask is queued and more keep arriving).
+                defrag_now = self.defrag and not self._waiting
+                if self.probe_memo and self._probe_skip(spec, defrag_now):
+                    self.metrics.n_probe_skips += 1
                     self._waiting.append((spec, now))
+                else:
+                    v0 = self._placement_version
+                    placed = self._try_place(spec, now, evq, strict=True)
+                    if not placed and defrag_now:
+                        if self._defrag_for(spec, now):
+                            placed = self._try_place(spec, now, evq,
+                                                     strict=True)
+                    if not placed:
+                        placed = self._try_place(spec, now, evq)
+                    if not placed:
+                        if self.probe_memo:
+                            self._record_probe_failure(
+                                spec,
+                                defrag_now
+                                and self._placement_version == v0)
+                        self._waiting.append((spec, now))
             elif ev.kind == DEPARTURE:
                 rt = self._residents.pop(ev.tid, None)
                 if rt is not None:

@@ -109,6 +109,17 @@ class PlacementPolicy:
         again.  Policies without that notion ignore the report; callers
         should still ``migrate(placement, avoid=cores)`` affected tenants."""
 
+    def free_state_token(self):
+        """Hashable token that is equal between two policy states iff
+        ``allocate`` is guaranteed to give the same success/failure for the
+        same spec in both — what the scheduler's negative-probe memo
+        compares.  ``None`` (the default) tells the scheduler to fall back
+        to its own placement-mutation counter (exact but never matches
+        across state changes); policies with canonical state (vNPU's
+        symmetry-normalized free-region key) override this to also match
+        across *equivalent* pools."""
+        return None
+
     def utilization(self) -> float:
         raise NotImplementedError
 
@@ -192,6 +203,14 @@ class VNPUPolicy(PlacementPolicy):
         """MappingEngine telemetry snapshot (cache hits/misses, escalations,
         region ops) — surfaced into :class:`ClusterMetrics`."""
         return self.hyp.engine.counters()
+
+    def free_state_token(self):
+        """(canonical free-shape id, buddy free-size multiset): equal
+        tokens guarantee identical ``allocate`` success/failure — mapping
+        feasibility is a function of the free-region shapes (strict:
+        a big-enough component exists; relaxed: enough free cores) and
+        memory feasibility of the buddy's free-size multiset alone."""
+        return (self.hyp.engine.free_state_id(), self.hyp.buddy.state_key())
 
     def release(self, placement: Placement) -> None:
         """Destroy the vNPU: cores rejoin the free set (O(component) region

@@ -80,10 +80,17 @@ class TestCacheBitIdentical:
     def _churn_check(seed):
         """Across a randomized allocate/release sequence, a (possibly
         cached) engine answer must be bit-identical — nodes, TED and the
-        full assignment — to a cold engine solving the same free set."""
+        full assignment — to a cold engine solving the same free set.
+
+        Pinned with ``symmetry=False``: the translation-only cache is
+        exactly equivariant (the candidate generators commute with id
+        shifts), so warm==cold holds bit-for-bit.  A D4-decoded hit is
+        TED-identical but may pick a different equal-cost node set than a
+        fresh heuristic solve — that relaxed property has its own tests
+        (``TestSymmetryCache``)."""
         rng = np.random.default_rng(seed)
         topo = mesh_2d(6, 6)
-        eng = MappingEngine(topo)
+        eng = MappingEngine(topo, symmetry=False)
         req = mesh_2d(2, 3, base_id=500)
         residents = []
         for _ in range(10):
@@ -96,7 +103,7 @@ class TestCacheBitIdentical:
                     eng.notify_allocate(r.nodes)
                     residents.append(r.nodes)
             warm = eng.map_request(req)          # served from cache when hot
-            cold_engine = MappingEngine(topo)
+            cold_engine = MappingEngine(topo, symmetry=False)
             cold_engine.reset(eng.regions.free)
             cold = cold_engine.map_request(req)
             if warm is None:
@@ -157,6 +164,254 @@ class TestCacheBitIdentical:
         r2 = eng.map_request(req, node_match=nm)
         assert eng.stats.hits == 0 and eng.stats.uncacheable >= 2
         assert r1.nodes == r2.nodes and r1.ted == r2.ted
+
+
+# ---------------------------------------------------------------------------
+# D4 symmetry-normalized cache keys
+# ---------------------------------------------------------------------------
+
+# the eight (row, col) lattice transforms, keyed like regions.D4_TRANSFORMS
+_D4_FNS = {
+    "identity": lambda r, c, R, C: (r, c),
+    "rot90": lambda r, c, R, C: (c, R - 1 - r),
+    "rot180": lambda r, c, R, C: (R - 1 - r, C - 1 - c),
+    "rot270": lambda r, c, R, C: (C - 1 - c, r),
+    "flip_rows": lambda r, c, R, C: (R - 1 - r, c),
+    "flip_cols": lambda r, c, R, C: (r, C - 1 - c),
+    "transpose": lambda r, c, R, C: (c, r),
+    "anti_transpose": lambda r, c, R, C: (C - 1 - c, R - 1 - r),
+}
+
+
+def _uniform_mesh(rows, cols):
+    """A mesh whose node attrs are D4-symmetric (constant mem_dist), so
+    every group element is attr-preserving."""
+    topo = mesh_2d(rows, cols)
+    for n in topo.node_attrs:
+        topo.node_attrs[n]["mem_dist"] = 0
+    return topo
+
+
+def _uniform_request(rows, cols):
+    req = mesh_2d(rows, cols, base_id=500)
+    for n in req.node_attrs:
+        req.node_attrs[n]["mem_dist"] = 0
+    return req
+
+
+def _random_blob(rng, rows, cols, size):
+    """A random connected coordinate set on a rows x cols lattice."""
+    start = (int(rng.integers(rows)), int(rng.integers(cols)))
+    blob = {start}
+    while len(blob) < size:
+        r, c = list(blob)[int(rng.integers(len(blob)))]
+        nbrs = [(r + dr, c + dc) for dr, dc in ((0, 1), (1, 0), (0, -1),
+                                                (-1, 0))
+                if 0 <= r + dr < rows and 0 <= c + dc < cols]
+        nbrs = [p for p in nbrs if p not in blob]
+        if nbrs:
+            blob.add(nbrs[int(rng.integers(len(nbrs)))])
+    return blob
+
+
+class TestSymmetryCache:
+    def _decode_check(self, topo, req, result, free):
+        """The decoded mapping must be a valid assignment onto the
+        transformed region whose induced cost equals the reported TED."""
+        assert result is not None
+        assert result.nodes <= free
+        assert set(result.assignment.values()) == set(result.nodes)
+        sub = topo.subgraph(result.nodes)
+        ref = induced_edit_cost(req, sub, result.assignment,
+                                default_node_match, default_edge_match)
+        assert result.ted == pytest.approx(ref, abs=1e-12)
+
+    def _transform_check(self, seed):
+        """Property: for a random free blob and every D4 element, a
+        transformed copy of (region, request) is answered soundly — a
+        cache HIT decodes to a valid assignment on the transformed mesh
+        with TED identical to the original solve's, and when the original
+        solve was perfect (TED 0, provably orientation-independent) every
+        transform MUST hit.  A suboptimal original may instead re-solve
+        fresh (heuristic quality is not D4-invariant — serving it across
+        orientations would let a lucky orientation poison the others);
+        then the fresh result must simply be valid."""
+        rng = np.random.default_rng(seed)
+        R = C = 9
+        topo = _uniform_mesh(R, C)
+        req = _uniform_request(2, 3)
+        blob = _random_blob(rng, R, C, int(rng.integers(7, 14)))
+        by_coord = {v: k for k, v in topo.coords.items()}
+        all_nodes = set(topo.node_attrs)
+        for name, fn in _D4_FNS.items():
+            eng = MappingEngine(topo)        # fresh engine per element
+            keep = {by_coord[p] for p in blob}
+            eng.notify_allocate(all_nodes - keep)
+            base = eng.map_request(req)
+            assert base is not None
+            m0 = eng.stats.misses
+            tkeep = {by_coord[fn(r, c, R, C)] for r, c in blob}
+            eng.notify_release(all_nodes - keep)
+            eng.notify_allocate(all_nodes - tkeep)
+            r2 = eng.map_request(req)
+            hit = eng.stats.misses == m0
+            self._decode_check(topo, req, r2, tkeep)
+            if base.ted == 0.0:
+                assert hit, f"perfect solve: transform {name} must hit"
+            if hit:
+                assert r2.ted == base.ted, f"transform {name} changed TED"
+
+    def test_perfect_region_hits_all_transforms(self):
+        """Deterministic anchor for the property: a 3x4 free rectangle
+        hosts the 2x3 request perfectly (TED 0), so all eight transformed
+        copies are cache hits with valid decodes."""
+        R = C = 9
+        topo = _uniform_mesh(R, C)
+        req = _uniform_request(2, 3)
+        by_coord = {v: k for k, v in topo.coords.items()}
+        all_nodes = set(topo.node_attrs)
+        rect = {(r, c) for r in range(3) for c in range(4)}
+        eng = MappingEngine(topo)
+        keep = {by_coord[p] for p in rect}
+        eng.notify_allocate(all_nodes - keep)
+        base = eng.map_request(req)
+        assert base.ted == 0.0
+        m0 = eng.stats.misses
+        prev = keep
+        for name, fn in _D4_FNS.items():
+            tkeep = {by_coord[fn(r, c, R, C)] for r, c in rect}
+            eng.notify_release(all_nodes - prev)
+            eng.notify_allocate(all_nodes - tkeep)
+            prev = tkeep
+            r2 = eng.map_request(req)
+            assert eng.stats.misses == m0, f"transform {name} missed"
+            self._decode_check(topo, req, r2, tkeep)
+            assert r2.ted == 0.0
+        assert eng.stats.sym_decoded_hits >= 2   # rotations are not shifts
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_all_transforms_hit_property(self, seed):
+        self._transform_check(seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_all_transforms_hit_seeded(self, seed):
+        # deterministic variant that runs even without hypothesis
+        self._transform_check(seed)
+
+    def test_vertical_reflection_hits_with_mem_dist(self):
+        """On the default layout (mem_interface_cols=(0,)) mem_dist is a
+        function of the column alone, so the row mirror is attr-preserving
+        and must be cache-unified — with the real heterogeneous attrs."""
+        topo = mesh_2d(7, 5)                 # default mem_interface_cols=(0,)
+        coords = topo.coords
+        by_coord = {v: k for k, v in coords.items()}
+        shape = {(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (1, 2)}
+        eng = MappingEngine(topo)
+        keep = {by_coord[p] for p in shape}
+        eng.notify_allocate(set(topo.node_attrs) - keep)
+        req = mesh_2d(2, 2, base_id=500)
+        r1 = eng.map_request(req)
+        misses0 = eng.stats.misses
+        # row mirror of the shape (columns, hence mem_dist, unchanged)
+        mirrored = {(6 - r, c) for r, c in shape}
+        mkeep = {by_coord[p] for p in mirrored}
+        eng.notify_release(set(topo.node_attrs) - keep)
+        eng.notify_allocate(set(topo.node_attrs) - mkeep)
+        r2 = eng.map_request(req)
+        assert eng.stats.misses == misses0          # D4 hit, no re-solve
+        assert eng.stats.sym_decoded_hits >= 1
+        self._decode_check(topo, req, r2, mkeep)
+        assert r2.ted == r1.ted
+
+    def test_mem_dist_asymmetry_is_not_unified(self):
+        """The column mirror *changes* mem_dist on the default layout, so
+        it must NOT be cache-unified even though the bare shapes match:
+        symmetry only applies when it preserves every attribute a match
+        function may read."""
+        topo = mesh_2d(5, 7)                 # mem_dist = col (interface col 0)
+        coords = topo.coords
+        by_coord = {v: k for k, v in coords.items()}
+        shape = {(0, 0), (0, 1), (0, 2), (1, 0), (2, 0), (1, 1)}
+        eng = MappingEngine(topo)
+        keep = {by_coord[p] for p in shape}
+        eng.notify_allocate(set(topo.node_attrs) - keep)
+        req = mesh_2d(2, 2, base_id=500)
+        eng.map_request(req)
+        misses0 = eng.stats.misses
+        # column mirror: same silhouette, different mem_dist pattern
+        mirrored = {(r, 6 - c) for r, c in shape}
+        mkeep = {by_coord[p] for p in mirrored}
+        eng.notify_release(set(topo.node_attrs) - keep)
+        eng.notify_allocate(set(topo.node_attrs) - mkeep)
+        r2 = eng.map_request(req)
+        assert eng.stats.misses == misses0 + 1      # fresh solve, no false hit
+        assert r2 is not None
+        # and the canonical keys really differ
+        adj = {n: tuple(ms) for n, ms in topo._adj().items()}
+        k1 = component_signature(topo, keep, adj).key
+        k2 = component_signature(topo, mkeep, adj).key
+        assert k1 != k2
+
+    def test_transform_recorded_and_order_consistent(self):
+        topo = _uniform_mesh(6, 6)
+        adj = {n: tuple(ms) for n, ms in topo._adj().items()}
+        # an L-tromino and its rotation must share a key; at least one of
+        # the two signatures decodes through a non-identity element
+        a = {0, 1, 6}            # (0,0),(0,1),(1,0)
+        b = {1, 7, 6}            # (0,1),(1,1),(1,0) — rot90 of the L
+        sa = component_signature(topo, a, adj)
+        sb = component_signature(topo, b, adj)
+        assert sa.key == sb.key
+        assert len(sa.order) == len(sb.order) == 3
+        assert {"identity"} != {sa.transform, sb.transform}
+        # symmetry off: translation-only keys separate the orientations
+        sa0 = component_signature(topo, a, adj, symmetry=False)
+        sb0 = component_signature(topo, b, adj, symmetry=False)
+        assert sa0.key != sb0.key
+        assert sa0.transform == sb0.transform == "identity"
+
+    def test_orientation_sensitive_mapper_not_poisoned_by_d4_twin(self):
+        """The rect first-fit mapper only finds an exact-shape window in
+        one orientation of a strip; D4-unifying its entries would let the
+        unlucky orientation (zig-zag fallback, TED > 0) poison the lucky
+        one.  ``d4_stable = False`` keys it by orientation: the rotated
+        twin re-solves fresh and finds the perfect rectangle."""
+        topo = _uniform_mesh(9, 9)
+        by_coord = {v: k for k, v in topo.coords.items()}
+        req = _uniform_request(2, 3)
+        eng = MappingEngine(topo, mapper="rect")
+        # solve the 3x2 strip first: no 2x3 window exists in it
+        strip_v = {by_coord[(r, c)] for r in range(3) for c in range(2)}
+        eng.notify_allocate(set(topo.node_attrs) - strip_v)
+        bad = eng.map_request(req)
+        assert bad is not None and bad.ted > 0.0
+        # now its rot90 twin: a fresh solve must find the exact window
+        strip_h = {by_coord[(r, c)] for r in range(2) for c in range(3)}
+        eng.notify_release(set(topo.node_attrs) - strip_v)
+        eng.notify_allocate(set(topo.node_attrs) - strip_h)
+        good = eng.map_request(req)
+        assert good is not None and good.ted == 0.0
+        assert eng.stats.sym_decoded_hits == 0
+
+    def test_free_key_canonical_across_equivalent_pools(self):
+        """FreeRegions.free_key / MappingEngine.free_state_id unify
+        equivalent pools (the probe memo's cross-state hits) and separate
+        different shapes."""
+        topo = _uniform_mesh(6, 6)
+        eng = MappingEngine(topo)
+        by_coord = {v: k for k, v in topo.coords.items()}
+        sq = {by_coord[(r, c)] for r in (0, 1) for c in (0, 1)}
+        eng.notify_allocate(sq)
+        id1 = eng.free_state_id()
+        eng.notify_release(sq)
+        sq2 = {by_coord[(r, c)] for r in (4, 5) for c in (4, 5)}
+        eng.notify_allocate(sq2)            # the rot180 image of that pool
+        assert eng.free_state_id() == id1
+        eng.notify_release(sq2)
+        line3 = {by_coord[(0, c)] for c in range(3)}
+        eng.notify_allocate(line3)          # different hole shape
+        assert eng.free_state_id() != id1
 
 
 # ---------------------------------------------------------------------------
