@@ -127,28 +127,34 @@ def _bench_entry(trace_name, mesh, mode, metrics, wall_s):
     return entry
 
 
-def _write_bench(gate_name, report, entries, bench_out):
+def _write_bench(gate_name, report, entries, bench_out, extra=None):
     """Persist the machine-readable perf record (tracked in-repo so the
-    trajectory across PRs is diffable).  The 16x16 and 32x32 gates each
-    own one ``gates`` slot and their mesh's ``entries`` rows; records from
-    the other gate are preserved so running either refreshes only its
-    half."""
+    trajectory across PRs is diffable).  Each gate (16x16, 32x32,
+    serving) owns one ``gates`` slot and its mesh's ``entries`` rows;
+    records from the other gates are preserved so running any one
+    refreshes only its half.  ``extra`` merges additional top-level
+    sections (the failure-sweep frontier)."""
     path = Path(bench_out)
     payload = {"benchmark": "cluster_sim", "gates": {}, "entries": []}
     if path.exists():
         try:
             old = json.loads(path.read_text())
+            payload.update({k: v for k, v in old.items()
+                            if k not in ("benchmark",)})
             payload["gates"] = dict(old.get("gates", {}))
             payload["entries"] = list(old.get("entries", []))
         except (json.JSONDecodeError, AttributeError):
             pass
-    payload["gates"][gate_name] = report
+    if gate_name is not None:
+        payload["gates"][gate_name] = report
     fresh_meshes = {e["mesh"] for e in entries}
     payload["entries"] = sorted(
         [e for e in payload["entries"] if e.get("mesh") not in fresh_meshes]
         + entries,
         key=lambda e: (e.get("mesh", ""), e.get("trace", ""),
                        e.get("mode", "")))
+    if extra:
+        payload.update(extra)
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
 
 
@@ -264,6 +270,55 @@ def run_pod_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
     return 0 if report["gate_ok"] else 1
 
 
+def run_failure_sweep(rates, trace_name, policies, mesh, horizon, seed,
+                      epoch_s, json_out, bench_out) -> int:
+    """Sweep a failure-rate grid and report the availability/utilization
+    frontier per policy (the ROADMAP fault-tolerance study): each rate
+    synthesizes its own seeded Poisson single-core death sequence, every
+    policy replays the same trace against it.  MIG loses a whole partition
+    per death (no finer quarantine), so its frontier collapses first;
+    vNPU/UVM quarantine per core and migrate residents away.  The
+    frontier is merged into ``BENCH_cluster_sim.json`` under
+    ``failure_frontier``."""
+    trace = make_trace(trace_name, seed=seed, horizon_s=horizon)
+    eff_horizon = horizon if horizon is not None \
+        else TRACES[trace_name].horizon_s
+    eff_seed = seed if seed is not None else TRACES[trace_name].seed
+    frontier = {p: [] for p in policies}
+    for rate in rates:
+        failures = synthesize_failures(rate, eff_horizon, mesh[0] * mesh[1],
+                                       seed=eff_seed) if rate > 0 else []
+        for name in policies:
+            policy = make_policy(name, mesh_2d(*mesh))
+            sched = ClusterScheduler(policy, hw=S.SIM_CONFIG,
+                                     epoch_s=epoch_s)
+            m = sched.run(trace, trace_name=trace_name, failures=failures)
+            frontier[name].append({
+                "rate_per_s": rate,
+                "availability": round(m.n_admitted / max(m.n_arrived, 1), 4),
+                "utilization": round(m.mean_utilization, 4),
+                "failed_cores": m.n_failed_cores,
+                "migrations": m.n_migrations,
+            })
+    record = {"trace": trace_name, "mesh": f"{mesh[0]}x{mesh[1]}",
+              "rates": list(rates), "frontier": frontier}
+    _write_bench(None, None, [], bench_out,
+                 extra={"failure_frontier": record})
+    if json_out:
+        print(json.dumps(record, indent=2))
+        return 0
+    print(f"failure sweep: trace={trace_name} mesh={mesh[0]}x{mesh[1]} "
+          f"rates={list(rates)}")
+    print(f"{'policy':>6} {'rate':>6} {'avail':>7} {'util':>7} "
+          f"{'dead':>5} {'migr':>5}")
+    for name in policies:
+        for row in frontier[name]:
+            print(f"{name:>6} {row['rate_per_s']:>6.3f} "
+                  f"{row['availability']:>7.4f} {row['utilization']:>7.4f} "
+                  f"{row['failed_cores']:>5} {row['migrations']:>5}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--trace", default="mixed",
@@ -285,6 +340,11 @@ def main(argv=None) -> int:
                     help="expected core failures per second over the "
                          "arrival horizon (Poisson, seeded); reports "
                          "availability vs utilization per policy")
+    ap.add_argument("--failure-sweep", default=None, metavar="R0,R1,...",
+                    help="sweep a comma-separated failure-rate grid and "
+                         "emit the availability/utilization frontier per "
+                         "policy into BENCH_cluster_sim.json "
+                         "(e.g. 0,0.05,0.1,0.2)")
     ap.add_argument("--no-defrag", action="store_true",
                     help="disable defragmenting migration")
     ap.add_argument("--gate", action="store_true",
@@ -318,6 +378,16 @@ def main(argv=None) -> int:
             make_policy(name, mesh_2d(1, 1))   # validate names up front
     except KeyError as e:
         ap.error(str(e))
+
+    if args.failure_sweep is not None:
+        try:
+            rates = [float(x) for x in args.failure_sweep.split(",") if x]
+        except ValueError:
+            ap.error(f"--failure-sweep wants comma-separated rates "
+                     f"(got {args.failure_sweep!r})")
+        return run_failure_sweep(rates, args.trace, policies, (rows, cols),
+                                 args.horizon, args.seed, args.epoch,
+                                 args.json, args.bench_out)
 
     failures = []
     if args.failure_rate > 0:

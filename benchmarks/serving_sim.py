@@ -1,0 +1,244 @@
+"""Request-level LLM serving simulation: vNPU vs MIG vs UVM on SLA-goodput.
+
+The serving-plane counterpart of ``cluster_sim.py``: the same event-driven
+multi-tenant scheduler, but every tenant of the ``serving`` trace carries a
+:mod:`repro.serve.requests` profile and serves a prefill/decode-mixed
+request stream through the :class:`~repro.serve.plane.ServingPlane` —
+continuous batching, KV-cache pressure on a real buddy arena, phase-aware
+throughput from the tenant's contention-scored placement, and the
+scheduler's elastic vNPU resize (RESIZE events under hysteresis).
+
+Per policy it reports **SLA-goodput** (requests meeting both their TTFT and
+TPOT targets, per second), the TTFT/TPOT percentiles, KV pressure events
+and the resize trajectory.  Baseline configs are serving-realistic: MIG is
+carved into eight 2x4 slices (the A100-style fine slicing that maximizes
+its tenancy) and the vNPU policy uses the engine's ``bipartite`` mapper
+(the vectorized scorer without exact-B&B escalation — placement quality is
+identical on this trace class, and defrag stays cheap).
+
+Run:
+    PYTHONPATH=src python benchmarks/serving_sim.py --trace serving
+
+CI gate (merges its numbers into ``BENCH_cluster_sim.json``):
+    PYTHONPATH=src python benchmarks/serving_sim.py --gate
+replays the ``serving`` trace on the 8x8 mesh through all three policies
+(SLA-aware admission) and fails unless (a) two back-to-back vNPU runs
+produce bit-identical request-level trajectories, (b) vNPU >= MIG and
+>= UVM on SLA-goodput, (c) elastic resize demonstrably fired
+(vNPU resize count > 0), and (d) the event loop stays inside the
+ms/event budget.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from cluster_sim import BENCH_PATH, _write_bench          # noqa: E402
+from repro.core import mesh_2d                            # noqa: E402
+from repro.sched import (ClusterScheduler, ServingConfig,  # noqa: E402
+                         TRACES, make_policy, make_trace)
+
+GATE_MESH = (8, 8)
+GATE_TRACE = "serving"
+GATE_MS_PER_EVENT = 60.0    # absolute event-loop budget (measured ~3 ms)
+
+# serving-realistic baseline configs (see module docstring)
+POLICY_KWARGS = {
+    "vnpu": {"mapper": "bipartite"},
+    "mig": {"partition_shapes": [(2, 4)] * 8},
+    "uvm": {},
+}
+
+
+def run_policy(policy_name, trace, mesh, *, trace_name=GATE_TRACE,
+               admission="sla", seed=0, epoch_s=2.0):
+    """One serving run: fresh policy + scheduler + plane."""
+    kwargs = dict(POLICY_KWARGS.get(policy_name, {}))
+    if policy_name == "mig" and mesh != tuple(GATE_MESH):
+        kwargs.pop("partition_shapes", None)   # quadrant default elsewhere
+    policy = make_policy(policy_name, mesh_2d(*mesh), **kwargs)
+    sched = ClusterScheduler(policy, epoch_s=epoch_s,
+                             serving=ServingConfig(seed=seed),
+                             admission=admission)
+    t0 = time.perf_counter()
+    metrics = sched.run(trace, trace_name=trace_name)
+    return metrics, time.perf_counter() - t0
+
+
+def _request_trajectory(metrics):
+    """The request-level outputs two runs must agree on exactly."""
+    return (metrics.request_log,
+            [(s.t, s.agg_fps, s.utilization, s.n_resident, s.n_queued)
+             for s in metrics.samples],
+            metrics.n_resizes, metrics.n_resize_attempts)
+
+
+def _policy_row(metrics, wall_s):
+    s = metrics.serving_summary()
+    s.update({
+        "policy": metrics.policy,
+        "admitted": metrics.n_admitted,
+        "arrived": metrics.n_arrived,
+        "mean_utilization": round(metrics.mean_utilization, 4),
+        "p95_wait_s": round(metrics.p95_wait_s, 3),
+        "wall_s": round(wall_s, 2),
+        "events": metrics.n_events,
+    })
+    return s
+
+
+def _print_table(rows):
+    hdr = (f"{'policy':>6} {'goodput':>8} {'good':>6} {'compl':>6} "
+           f"{'reqs':>6} {'ttft_p95':>9} {'tpot_p95':>9} {'resize':>7} "
+           f"{'kv_oom':>7} {'admit':>6} {'util':>6} {'wall_s':>7}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['policy']:>6} {r['sla_goodput_rps']:>8.2f} "
+              f"{r['sla_good']:>6} {r['completed']:>6} {r['requests']:>6} "
+              f"{r['ttft_p95_s']:>8.3f}s {r['tpot_p95_s']:>8.4f}s "
+              f"{r['resizes']:>3}/{r['resize_attempts']:<3} "
+              f"{r['kv_preemptions'] + r['kv_admit_oom']:>7} "
+              f"{r['admitted']:>3}/{r['arrived']:<3} "
+              f"{r['mean_utilization']:>6.3f} {r['wall_s']:>7.1f}")
+
+
+def _bench_rows(rows, mesh):
+    out = []
+    for r in rows:
+        out.append({
+            "trace": GATE_TRACE,
+            "mesh": f"{mesh[0]}x{mesh[1]}",
+            "mode": f"serving-{r['policy']}",
+            "wall_s": r["wall_s"],
+            "events": r["events"],
+            "ms_per_event": round(r["wall_s"] / max(r["events"], 1) * 1e3,
+                                  3),
+            "admitted": r["admitted"],
+            "sla_goodput_rps": r["sla_goodput_rps"],
+            "requests": r["requests"],
+            "completed": r["completed"],
+            "ttft_p95_s": r["ttft_p95_s"],
+            "tpot_p95_s": r["tpot_p95_s"],
+            "resizes": r["resizes"],
+            "kv_preemptions": r["kv_preemptions"],
+        })
+    return out
+
+
+def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
+    """The serving-gate (see module docstring)."""
+    trace = make_trace(GATE_TRACE)
+    runs = {}
+    for name in ("vnpu", "mig", "uvm"):
+        runs[name] = run_policy(name, trace, GATE_MESH)
+    # determinism: a second vNPU run must replay bit-identically at the
+    # request level (every TTFT/TPOT and every resize decision)
+    vnpu2, _ = run_policy("vnpu", trace, GATE_MESH)
+    deterministic = (_request_trajectory(runs["vnpu"][0])
+                     == _request_trajectory(vnpu2))
+
+    rows = [_policy_row(m, w) for m, w in runs.values()]
+    by = {r["policy"]: r for r in rows}
+    goodput_ok = (by["vnpu"]["sla_goodput_rps"]
+                  >= by["mig"]["sla_goodput_rps"] - 1e-9
+                  and by["vnpu"]["sla_goodput_rps"]
+                  >= by["uvm"]["sla_goodput_rps"] - 1e-9)
+    resize_ok = by["vnpu"]["resizes"] > 0
+    ms_per_event = max(r["wall_s"] / max(r["events"], 1) * 1e3
+                       for r in rows)
+    budget_ok = ms_per_event <= GATE_MS_PER_EVENT
+
+    report = {
+        "mesh": list(GATE_MESH),
+        "trace": GATE_TRACE,
+        "tenants": len(trace),
+        "deterministic_request_trajectories": deterministic,
+        "vnpu_goodput_geq_baselines": goodput_ok,
+        "vnpu_resizes": by["vnpu"]["resizes"],
+        "resize_fired": resize_ok,
+        "max_ms_per_event": round(ms_per_event, 2),
+        "ms_per_event_budget": GATE_MS_PER_EVENT,
+        "policies": rows,
+        "gate_ok": (deterministic and goodput_ok and resize_ok
+                    and budget_ok),
+    }
+    _write_bench("serving", report, _bench_rows(rows, GATE_MESH), bench_out)
+    if json_out:
+        print(json.dumps(report, indent=2))
+    else:
+        _print_table(rows)
+        print(f"deterministic={'OK' if deterministic else 'DIVERGED'} "
+              f"vnpu>=baselines={'OK' if goodput_ok else 'FAIL'} "
+              f"resize_fired={'OK' if resize_ok else 'FAIL'} "
+              f"({by['vnpu']['resizes']} resizes) "
+              f"budget={ms_per_event:.1f}ms/event "
+              f"(<= {GATE_MS_PER_EVENT}) -> "
+              f"{'OK' if report['gate_ok'] else 'FAIL'}")
+    return 0 if report["gate_ok"] else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default="serving",
+                    help="trace name: " + "|".join(sorted(TRACES)))
+    ap.add_argument("--policy", default="vnpu,mig,uvm",
+                    help="comma-separated: vnpu,mig,uvm")
+    ap.add_argument("--mesh", default="8,8", help="physical mesh rows,cols")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="trace seed (also seeds the request streams)")
+    ap.add_argument("--horizon", type=float, default=None,
+                    help="arrival horizon in seconds (trace default)")
+    ap.add_argument("--admission", default="sla", choices=("fifo", "sla"),
+                    help="queue drain order: FIFO or SLA-aware "
+                         "(EDF with TTFT-predictive deadlines)")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI mode: deterministic request trajectories, "
+                         "vNPU >= MIG/UVM on SLA-goodput, resize fires, "
+                         "ms/event budget; merges BENCH_cluster_sim.json")
+    ap.add_argument("--bench-out", default=str(BENCH_PATH),
+                    help="where --gate merges the machine-readable "
+                         "BENCH record")
+    ap.add_argument("--json", action="store_true", help="machine output")
+    args = ap.parse_args(argv)
+
+    if args.gate:
+        return run_gate(args.json, args.bench_out)
+
+    try:
+        rows_cols = tuple(int(x) for x in args.mesh.split(","))
+        assert len(rows_cols) == 2
+    except (ValueError, AssertionError):
+        ap.error(f"--mesh wants 'rows,cols' (got {args.mesh!r})")
+    try:
+        trace = make_trace(args.trace, seed=args.seed,
+                           horizon_s=args.horizon)
+    except KeyError as e:
+        ap.error(str(e))
+
+    rows = []
+    for name in [p.strip() for p in args.policy.split(",") if p.strip()]:
+        metrics, wall = run_policy(name, trace, rows_cols,
+                                   trace_name=args.trace,
+                                   admission=args.admission,
+                                   seed=args.seed or 0)
+        rows.append(_policy_row(metrics, wall))
+    if args.json:
+        print(json.dumps({"trace": args.trace, "mesh": list(rows_cols),
+                          "admission": args.admission, "policies": rows},
+                         indent=2))
+    else:
+        print(f"trace={args.trace} tenants={len(trace)} "
+              f"mesh={rows_cols[0]}x{rows_cols[1]} "
+              f"admission={args.admission}")
+        _print_table(rows)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

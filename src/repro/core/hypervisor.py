@@ -293,7 +293,18 @@ class Hypervisor:
             # re-shuffle buys nothing — skip the rebuild/reinstall/region
             # churn entirely and keep ``migrate_vnpu``'s moved=False honest
             return vnpu
-        rt = make_routing_table(vmid, dict(result.assignment),
+        return self._commit_mapping(vnpu, result)
+
+    # -- shared solve-commit (remap / resize) --------------------------------
+    def _commit_mapping(self, vnpu: VirtualNPU,
+                        result: MappingResult) -> VirtualNPU:
+        """Install a re-solve onto a live vNPU: rebuild and reinstall the
+        routing table under the same vmid, swap the core set and the
+        engine's free-region view.  Memory (RTT) is untouched.  The one
+        commit sequence both :meth:`remap_vnpu` and :meth:`resize_vnpu`
+        use — any ordering or quarantine fix lands in both paths."""
+        old_cores = set(vnpu.p_cores)
+        rt = make_routing_table(vnpu.vmid, dict(result.assignment),
                                 phys_cols=self._phys_cols(),
                                 phys_coords=self.topo.coords or None)
         vnpu.p_cores = result.nodes
@@ -305,6 +316,38 @@ class Hypervisor:
         self.engine.notify_release(old_cores - self.quarantined)
         self.engine.notify_allocate(result.nodes)
         return vnpu
+
+    # -- elastic resize (serving plane; used by sched/cluster) --------------
+    def resize_vnpu(self, vmid: int, new_topology: Topology,
+                    node_match: Optional[NodeMatch] = None) -> VirtualNPU:
+        """Grow or shrink a live vNPU to ``new_topology`` cores.
+
+        Reuses the remap machinery: the tenant's own cores count as free
+        for the re-solve (``free_override``), so a grow prefers extending
+        in place and a shrink keeps a subset of the current footprint when
+        the mapper scores it best; the canonical TED cache applies as for
+        any other solve.  The routing table is rebuilt and reinstalled
+        under the same vmid; global memory (RTT) is untouched — KV/weight
+        contents survive, and the scheduler charges the scratchpad re-warm
+        pause exactly like a migration.
+
+        Raises :class:`AllocationError` when no sub-topology of the new
+        size exists (the vNPU is left unchanged — resize is transactional).
+        """
+        vnpu = self.vnpus[vmid]
+        free_for = ((self.free_cores() | set(vnpu.p_cores))
+                    - self.quarantined)
+        result = self.engine.map_request(
+            new_topology, node_match=node_match,
+            require_connected=vnpu.request.require_connected,
+            mapper=vnpu.request.mapper, free_override=free_for)
+        if result is None:
+            raise AllocationError(
+                f"cannot resize vmid={vmid} to {new_topology.num_nodes} "
+                f"cores: no candidate sub-topology")
+        vnpu.request = dataclasses.replace(vnpu.request,
+                                           topology=new_topology)
+        return self._commit_mapping(vnpu, result)
 
     # -- live migration (defragmentation; used by sched/cluster) ------------
     def migrate_vnpu(self, vmid: int,

@@ -813,6 +813,131 @@ def rescore_contention(sk, *, external_flows: Sequence[Flow] = (),
 
 
 # ---------------------------------------------------------------------------
+# serving phase model (prefill / decode) over the tensor skeleton
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PhaseModel:
+    """Phase-aware serving throughput for one LLM tenant.
+
+    Derived from the tenant's cached :class:`TensorSkeleton` and its
+    current contention-aware :class:`RunReport` (the scheduler's epoch
+    score), so cross-tenant NoC interference and HBM concurrency reach the
+    request level through the same ledger-maintained context that scores
+    epochs — nothing is hand-set:
+
+    * **prefill** is a compute-bound full forward pass: the proxy graph is
+      one iteration over ``proxy_seq`` tokens, so prefill throughput is
+      ``report.fps x proxy_seq`` tokens/s (contention, TDM slicing and UVM
+      serialization all arrive via the report's interval);
+    * **decode** is bandwidth-bound: one batched step streams the weight
+      shards that don't fit in aggregate scratchpad plus every active
+      request's KV from HBM (shared across ``decode_hbm_clients``
+      streamers), pays the per-token ring all-reduce scaled by the
+      tenant's current NoC contention ratio, and the KV RTT re-walk
+      stall (``n_ranges x rtt_entry_read_cycles``, Pattern 2).
+    """
+    prefill_tokens_per_s: float
+    # weights stream + slice-serialized all-reduce + TDM swap; the HBM
+    # streaming terms are charged once per step (a TDM slice streams only
+    # its own shard set and the batch KV is read once per token), only
+    # the per-slice all-reduce serializes — folded in at derive time
+    step_base_cycles: float
+    hbm_bytes_per_cycle: float         # this tenant's decode-phase HBM share
+    stall_cycles_per_range: int
+    freq_hz: float
+    slices: int = 1                    # TDM: virtual slices run serially
+    weights_resident: bool = True
+
+    def decode_step_s(self, active_kv_bytes: float, n_ranges: int) -> float:
+        """Seconds for one continuous-batching decode step (one token for
+        every active request) given the batch's live KV bytes and total
+        RTT range count."""
+        cyc = (self.step_base_cycles
+               + active_kv_bytes / self.hbm_bytes_per_cycle
+               + n_ranges * self.stall_cycles_per_range)
+        return cyc / self.freq_hz
+
+
+#: fraction of per-tile scratchpad available to hold resident weight
+#: shards during decode (the rest stages activations and KV tiles) — when
+#: the tensor-partitioned shards fit, decode stops streaming weights from
+#: HBM, which is the structural reason growing a vNPU speeds decode.
+WEIGHTS_SRAM_FRACTION = 0.5
+
+
+def weights_resident(weight_bytes: int, physical_tiles: int,
+                     hw: HWConfig) -> bool:
+    """Do tensor-partitioned weight shards fit in the aggregate scratchpad
+    of ``physical_tiles`` tiles?  The one formula both the phase model and
+    the scheduler's HBM-streamer census use — they must agree on who is
+    streaming or decode bandwidth shares are computed against the wrong
+    client count."""
+    return weight_bytes <= \
+        hw.scratchpad_per_tile * physical_tiles * WEIGHTS_SRAM_FRACTION
+
+
+def derive_phase_model(sk: TensorSkeleton, report: RunReport, *,
+                       proxy_seq: int,
+                       decode_hbm_clients: int = 1,
+                       isolated_interval: Optional[int] = None) -> PhaseModel:
+    """Build the serving :class:`PhaseModel` from one tenant's skeleton and
+    its current (contention-aware) report.  O(reduced layers).
+
+    ``decode_hbm_clients`` is the number of residents streaming from HBM
+    during decode (all actively-serving LLM tenants share the port);
+    the NoC contention ratio is ``report.interval / isolated interval`` —
+    both recombinations of the same cached skeleton, so the ratio is
+    exactly the slowdown the ledger's aggregated co-tenant loads induce.
+    ``isolated_interval`` is that denominator; it is a pure function of
+    the skeleton, so callers that rebuild phase models per scoring pass
+    (the scheduler) cache it per placement and pass it in.
+    """
+    if not isinstance(sk, TensorSkeleton):
+        raise TypeError("serving phase model requires a tensor-parallel "
+                        f"skeleton, got {type(sk).__name__}")
+    hw, graph, n = sk.hw, sk.graph, sk.n
+    physical = sk.tdm_physical if (sk.tdm_physical and sk.tdm_physical < n) \
+        else n
+    slices = -(-n // physical)
+    bw = hw.hbm_bytes_per_cycle / max(decode_hbm_clients, 1)
+
+    resident = weights_resident(graph.total_weight_bytes, physical, hw)
+    # weights stream once per step whatever the slicing (each TDM slice
+    # streams only its own shard set, serialized back to the whole set)
+    base = 0.0 if resident else graph.total_weight_bytes / bw
+
+    iso = (isolated_interval if isolated_interval is not None
+           else finish_tensor(sk).interval_cycles)
+    contention = max(1.0, report.interval_cycles / max(iso, 1))
+    hops = max(sk.hops, 1.0)
+    comm = 0.0
+    for out_bytes in sk.reduce_out_bytes:
+        tok_bytes = out_bytes / max(proxy_seq, 1)   # one token's activation
+        if sk.comm == "uvm":
+            # bounce through global memory: n writes + n reads + barrier
+            comm += 2 * tok_bytes * n / bw + hw.uvm_sync_cycles
+        else:
+            vol = 2 * tok_bytes * (n - 1) / max(n, 1)
+            comm += (vol / hw.noc_link_bytes_per_cycle * hops * contention
+                     + 2 * (n - 1) * hops * hw.noc_hop_cycles)
+    # only the all-reduce serializes per TDM slice (finish_tensor's
+    # ``ar_cycles *= slices`` convention), plus one context swap per step
+    base += comm * slices
+    if slices > 1:
+        base += hw.tdm_switch_cycles
+
+    return PhaseModel(
+        prefill_tokens_per_s=max(report.fps * proxy_seq, 1e-9),
+        step_base_cycles=base,
+        hbm_bytes_per_cycle=bw,
+        stall_cycles_per_range=hw.rtt_entry_read_cycles,
+        freq_hz=hw.freq_hz,
+        slices=slices,
+        weights_resident=resident)
+
+
+# ---------------------------------------------------------------------------
 # broadcast micro-model (Fig. 13)
 # ---------------------------------------------------------------------------
 

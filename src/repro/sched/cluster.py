@@ -41,6 +41,7 @@ telemetry next to the ledger's hit/recompute counters.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -48,15 +49,55 @@ import numpy as np
 
 from ..core import simulator as S
 from ..core.baselines import AllocationError
-from ..core.simulator import Flow, HWConfig, RunReport
+from ..core.simulator import Flow, HWConfig, PhaseModel, RunReport
 from ..core.workloads import WorkloadGraph
-from .events import (ARRIVAL, DEPARTURE, EPOCH, FAILURE, EventQueue,
+from ..serve.plane import ServingPlane
+from ..serve.requests import get_profile
+from .events import (ARRIVAL, DEPARTURE, EPOCH, FAILURE, RESIZE, EventQueue,
                      TenantSpec)
 from .ledger import InterferenceLedger
 from .policy import Placement, PlacementPolicy
 from .traces import get_serving_workload
 
 RESCORE_MODES = ("ledger", "oracle")
+ADMISSION_MODES = ("fifo", "sla")
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    """Turns the request-level serving plane on and parameterizes the
+    elastic-resize controller.
+
+    The scheduler samples each admitted LLM tenant's request stream with
+    ``seed`` (deterministic per tenant id), advances its continuous-batching
+    server between events, and at every epoch reads the tenant's pressure
+    signals: growth fires when the decode queue is ``grow_queue_depth``
+    deep, the KV arena is ``grow_kv_occupancy`` full, or an admission was
+    KV-blocked; shrink fires after ``shrink_epochs`` consecutive idle
+    epochs (empty queue, batch under ``shrink_batch_fill``).  Both
+    directions respect a per-tenant ``cooldown_s`` hysteresis and the
+    ``grow_limit`` cap (a multiple of the original core ask); shrink never
+    goes below the original ask.
+    """
+    seed: int = 0
+    grow_queue_depth: int = 3
+    grow_kv_occupancy: float = 0.85
+    shrink_batch_fill: float = 0.25
+    shrink_epochs: int = 3
+    cooldown_s: float = 6.0
+    grow_limit: float = 3.0
+
+
+@dataclasses.dataclass
+class _ResizeState:
+    """Per-tenant hysteresis bookkeeping for the resize controller."""
+    orig_n_cores: int
+    last_resize_s: float = -math.inf
+    idle_epochs: int = 0
+    # growth cannot extend the KV arena (it is fixed at attach), only
+    # drain contexts faster — so KV-only pressure buys one growth attempt
+    # per pressure episode instead of marching to the cap
+    kv_grow_tried: bool = False
 
 
 @dataclasses.dataclass
@@ -123,6 +164,23 @@ class ClusterMetrics:
     # LedgerCounters.as_dict()
     ledger_counters: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    # ---- request-level serving metrics (ServingConfig runs only) ----
+    n_resize_attempts: int = 0        # RESIZE events processed
+    n_resizes: int = 0                # resizes the policy actually performed
+    n_grows: int = 0
+    n_shrinks: int = 0
+    requests_arrived: int = 0
+    requests_completed: int = 0
+    requests_sla_good: int = 0        # met both TTFT and TPOT targets
+    tokens_generated: int = 0
+    kv_preemptions: int = 0           # mid-decode KV OOM evictions
+    kv_admit_oom: int = 0             # admissions deferred on KV pressure
+    requests_dropped: int = 0         # prompts larger than the whole arena
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    tpot_s: List[float] = dataclasses.field(default_factory=list)
+    # compact per-request trajectory for determinism gates:
+    # (tid, rid, ttft, tpot, tokens_out, preempts), completed-or-censored
+    request_log: List[Tuple] = dataclasses.field(default_factory=list)
 
     @property
     def mean_utilization(self) -> float:
@@ -156,6 +214,40 @@ class ClusterMetrics:
         return float(np.median(np.array(self.scoring_pass_s))) * 1e3
 
     @property
+    def sla_goodput_rps(self) -> float:
+        """Requests meeting both TTFT and TPOT targets, per second of the
+        run horizon — the serving plane's headline axis."""
+        return self.requests_sla_good / self.horizon_s if self.horizon_s \
+            else 0.0
+
+    def _latency_pct(self, xs: List[float], q: float) -> float:
+        finite = [x for x in xs if math.isfinite(x)]
+        if not finite:
+            return 0.0
+        return float(np.percentile(np.array(finite), q))
+
+    def serving_summary(self) -> Dict[str, float]:
+        """Flat digest of the request-level serving run."""
+        return {
+            "requests": self.requests_arrived,
+            "completed": self.requests_completed,
+            "sla_good": self.requests_sla_good,
+            "sla_goodput_rps": round(self.sla_goodput_rps, 4),
+            "tokens_generated": self.tokens_generated,
+            "ttft_p50_s": round(self._latency_pct(self.ttft_s, 50), 4),
+            "ttft_p95_s": round(self._latency_pct(self.ttft_s, 95), 4),
+            "tpot_p50_s": round(self._latency_pct(self.tpot_s, 50), 5),
+            "tpot_p95_s": round(self._latency_pct(self.tpot_s, 95), 5),
+            "kv_preemptions": self.kv_preemptions,
+            "kv_admit_oom": self.kv_admit_oom,
+            "requests_dropped": self.requests_dropped,
+            "resizes": self.n_resizes,
+            "grows": self.n_grows,
+            "shrinks": self.n_shrinks,
+            "resize_attempts": self.n_resize_attempts,
+        }
+
+    @property
     def mean_tenant_fps(self) -> float:
         rates = [it / act for it, act in
                  ((self.tenant_iterations[t], self.tenant_active_s[t])
@@ -186,6 +278,8 @@ class ClusterMetrics:
             out["engine"] = dict(self.engine_counters)
         if self.ledger_counters:
             out["ledger"] = dict(self.ledger_counters)
+        if self.requests_arrived:
+            out["serving"] = self.serving_summary()
         return out
 
 
@@ -203,10 +297,16 @@ class ClusterScheduler:
                  defrag: bool = True,
                  max_migrations_per_event: int = 2,
                  rescore: str = "ledger",
-                 probe_memo: Optional[bool] = None):
+                 probe_memo: Optional[bool] = None,
+                 serving: Optional[ServingConfig] = None,
+                 admission: str = "fifo"):
         if rescore not in RESCORE_MODES:
             raise ValueError(
                 f"rescore must be one of {RESCORE_MODES}, got {rescore!r}")
+        if admission not in ADMISSION_MODES:
+            raise ValueError(
+                f"admission must be one of {ADMISSION_MODES}, "
+                f"got {admission!r}")
         self.policy = policy
         self.hw = hw or S.SIM_CONFIG
         self.topo = policy.topo
@@ -221,6 +321,20 @@ class ClusterScheduler:
             else probe_memo
         self.ledger: Optional[InterferenceLedger] = (
             InterferenceLedger(self.topo) if rescore == "ledger" else None)
+        # request-level serving plane (opt in): continuous batching per
+        # resident LLM tenant + the elastic-resize pressure controller
+        self.serving = serving
+        self.admission = admission
+        self.plane: Optional[ServingPlane] = (
+            ServingPlane(seed=serving.seed) if serving is not None else None)
+        self._resize_state: Dict[int, _ResizeState] = {}
+        # tid -> {hbm-streamer count -> phase model}: the streamer count
+        # oscillates as servers go busy/idle, so keep one model per count
+        # instead of thrashing a single slot
+        self._phase_cache: Dict[int, Dict[int, PhaseModel]] = {}
+        # tid -> isolated (no-external-load) interval of the cached
+        # skeleton — pure function of the placement, invalidated with it
+        self._iso_cache: Dict[int, int] = {}
 
         self._residents: Dict[int, ResidentTenant] = {}
         self._failed_cores: set = set()
@@ -309,6 +423,7 @@ class ClusterScheduler:
                           if r.placement.hbm_client)
         self._scores = {tid: self._score_tenant(rt, hbm_clients)
                         for tid, rt in self._residents.items()}
+        self._phase_cache.clear()
         self._dirty = False
 
     def _rescore_dirty(self) -> None:
@@ -319,6 +434,7 @@ class ClusterScheduler:
         for tid in live:
             self._scores[tid] = self._score_tenant(
                 self._residents[tid], led.hbm_clients)
+            self._phase_cache.pop(tid, None)
         led.counters.rescored += len(live)
         led.counters.reused += len(self._residents) - len(live)
 
@@ -356,17 +472,22 @@ class ClusterScheduler:
         self._flows.pop(tid, None)
         self._scores.pop(tid, None)
         self._skeletons.pop(tid, None)
+        self._phase_cache.clear()      # decode HBM-client count changed
+        self._iso_cache.pop(tid, None)
         if self.ledger is not None:
             self.ledger.remove(tid)
         else:
             self._dirty = True
 
     def _tenant_moved(self, rt: ResidentTenant) -> None:
-        """Placement changed in place (defrag / failure migration): refresh
-        the flow and skeleton caches and swap the ledger footprint."""
+        """Placement changed in place (defrag / failure migration / elastic
+        resize): refresh the flow and skeleton caches and swap the ledger
+        footprint."""
         self._placement_version += 1
         self._flows.pop(rt.spec.tid, None)
         self._skeletons.pop(rt.spec.tid, None)
+        self._phase_cache.pop(rt.spec.tid, None)
+        self._iso_cache.pop(rt.spec.tid, None)
         if self.ledger is not None:
             self.ledger.update(rt.spec.tid, self._tenant_flows(rt),
                                hbm_client=rt.placement.hbm_client)
@@ -374,12 +495,15 @@ class ClusterScheduler:
             self._dirty = True
 
     # -- negative-probe memoization -----------------------------------------
-    @staticmethod
-    def _spec_key(spec: TenantSpec) -> Tuple:
-        """The size class of a placement attempt: everything ``allocate``
+    def _spec_key(self, spec: TenantSpec) -> Tuple:
+        """The identity of a placement attempt — everything ``allocate``
         reads from a spec (model identity is throughput-, not
-        placement-relevant)."""
-        return (spec.n_cores, spec.memory_bytes, spec.bandwidth_cap)
+        placement-relevant).  Delegated to the policy: the default is the
+        ``(n_cores, memory_bytes, bandwidth_cap)`` size class; vNPU refines
+        it with the request topology's canonical shape key so
+        heterogeneous asks with colliding size classes never share a memo
+        entry (``PlacementPolicy.request_key``)."""
+        return self.policy.request_key(spec)
 
     def _free_token(self):
         """Current free-pool identity for the probe memo: the policy's
@@ -429,21 +553,186 @@ class ClusterScheduler:
         self._probe_memo[self._spec_key(spec)] = (
             self._free_token(), defrag_covered, self._placement_version)
 
+    # -- serving plane -----------------------------------------------------
+    def _weights_resident(self, rt: ResidentTenant) -> bool:
+        """Do this tenant's tensor-partitioned weight shards fit in its
+        allocation's aggregate scratchpad?  Placement-only (no circular
+        dependence on the HBM-client count); the same
+        :func:`repro.core.simulator.weights_resident` formula the phase
+        model applies, so the streamer census and the model agree."""
+        p = rt.placement
+        physical = p.tdm_physical or len(set(p.cores))
+        return S.weights_resident(rt.graph.total_weight_bytes, physical,
+                                  self.hw)
+
+    def _n_streamers(self) -> int:
+        """Residents streaming weights from HBM during decode: attached
+        tenants with work in flight whose shards don't fit in scratchpad.
+        Snapshotted once per integration window (order-independent); a
+        tenant grown past its weights-residency threshold stops streaming,
+        which speeds *everyone's* decode — the cluster-wide payoff of
+        elastic growth.  Weight traffic dominates KV traffic, so resident
+        tenants' KV reads are not counted as an extra client."""
+        n = 0
+        for tid, server in self.plane.servers.items():
+            rt = self._residents.get(tid)
+            if rt is None:
+                continue
+            busy = (server.active or server.pending
+                    or server.prefill is not None)
+            if busy and not self._weights_resident(rt):
+                n += 1
+        return max(1, n)
+
+    def _phase_model(self, rt: ResidentTenant,
+                     streamers: int) -> PhaseModel:
+        """The tenant's current phase-aware serving rates, derived from its
+        cached placement skeleton and contention-aware epoch score (cached
+        per HBM-streamer count until the score or placement changes)."""
+        tid = rt.spec.tid
+        # scores first: a dirty pass clears/pops _phase_cache, so taking
+        # the per-tid slot before it would store into an orphaned dict
+        self._ensure_scores()
+        per_tid = self._phase_cache.setdefault(tid, {})
+        pm = per_tid.get(streamers)
+        if pm is not None:
+            return pm
+        sk = self._skeleton(rt)
+        report = self._scores.get(tid)
+        if report is None:               # first window before any epoch
+            report = S.rescore_contention(sk)
+        iso = self._iso_cache.get(tid)
+        if iso is None:
+            iso = S.finish_tensor(sk).interval_cycles
+            self._iso_cache[tid] = iso
+        pm = S.derive_phase_model(
+            sk, report,
+            proxy_seq=self.plane.servers[tid].profile.proxy_seq,
+            decode_hbm_clients=streamers, isolated_interval=iso)
+        per_tid[streamers] = pm
+        return pm
+
+    def _fold_records(self, model: str, server) -> None:
+        """Aggregate a departed tenant's request records into the metrics."""
+        profile = get_profile(model)
+        m = self.metrics
+        for rec in server.records:
+            m.requests_arrived += 1
+            m.requests_completed += rec.completed
+            m.tokens_generated += rec.tokens_out
+            if rec.sla_good(profile.ttft_slo_s, profile.tpot_slo_s):
+                m.requests_sla_good += 1
+            if rec.completed:
+                m.ttft_s.append(rec.ttft_s)
+                m.tpot_s.append(rec.tpot_s)
+            m.request_log.append(
+                (rec.tid, rec.rid, round(rec.ttft_s, 9),
+                 round(rec.tpot_s, 9), rec.tokens_out, rec.preempts))
+        m.kv_preemptions += server.kv.stats.grow_oom
+        m.kv_admit_oom += server.kv.stats.admit_oom
+        m.requests_dropped += server.n_dropped
+
+    def _check_pressure(self, now: float, evq: EventQueue) -> None:
+        """Epoch hook of the elastic-resize controller: read each serving
+        tenant's pressure signals and schedule RESIZE events under
+        hysteresis (see :class:`ServingConfig`).
+
+        Admission outranks elasticity: while tenants wait in the cluster
+        queue, growth is suppressed — a resident scaling up would take the
+        very cores a queued tenant needs (and the queued tenant's whole
+        stream is worth more goodput than a resident's marginal speedup).
+        Shrinks are always allowed; they feed the queue."""
+        cfg = self.serving
+        may_grow = not self._waiting
+        for tid, rt in self._residents.items():
+            if not self.plane.is_attached(tid):
+                continue
+            st = self._resize_state[tid]
+            if now - st.last_resize_s < cfg.cooldown_s:
+                continue
+            sig = self.plane.pressure(tid)
+            cur = rt.spec.n_cores
+            queue_pressure = sig.queue_depth >= cfg.grow_queue_depth
+            kv_pressure = (sig.kv_occupancy >= cfg.grow_kv_occupancy
+                           or sig.kv_blocked)
+            if not kv_pressure:
+                st.kv_grow_tried = False      # pressure episode ended
+            grow = may_grow and (queue_pressure
+                                 or (kv_pressure and not st.kv_grow_tried))
+            idle = (sig.queue_depth == 0 and not sig.kv_blocked
+                    and sig.batch_fill <= cfg.shrink_batch_fill)
+            if grow:
+                st.idle_epochs = 0
+                cap = max(int(st.orig_n_cores * cfg.grow_limit),
+                          st.orig_n_cores)
+                new = min(cap, cur + max(2, cur // 2))
+                if new > cur:
+                    evq.push(now, RESIZE, tid=tid, n_cores=new)
+                    st.last_resize_s = now   # cooldown even if resize fails
+                    if kv_pressure and not queue_pressure:
+                        st.kv_grow_tried = True
+            elif idle:
+                st.idle_epochs += 1
+                if st.idle_epochs >= cfg.shrink_epochs \
+                        and cur > st.orig_n_cores:
+                    new = max(st.orig_n_cores, cur - max(2, cur // 2))
+                    evq.push(now, RESIZE, tid=tid, n_cores=new)
+                    st.last_resize_s = now
+                    st.idle_epochs = 0
+            else:
+                st.idle_epochs = 0
+
+    def _do_resize(self, ev, now: float) -> None:
+        """RESIZE event: drive the policy's elastic resize and charge the
+        scratchpad re-warm pause like a migration (the vNPU's memory — RTT
+        contents, KV arena — survives; only the cores change)."""
+        rt = self._residents.get(ev.tid)
+        if rt is None or not (self.plane and self.plane.is_attached(ev.tid)):
+            return                     # departed while the event was queued
+        self.metrics.n_resize_attempts += 1
+        old_n = rt.spec.n_cores
+        new_p, resized = self.policy.resize(rt.placement, ev.n_cores)
+        if not resized:
+            return
+        rt.placement = new_p
+        # the spec objects in a trace are shared across policy runs —
+        # replace, never mutate in place
+        rt.spec = dataclasses.replace(rt.spec, n_cores=len(set(new_p.cores)))
+        self.metrics.n_resizes += 1
+        if rt.spec.n_cores > old_n:
+            self.metrics.n_grows += 1
+        else:
+            self.metrics.n_shrinks += 1
+        rt.migrations += 1
+        pause_cycles = self.policy.migration_cycles(
+            rt.placement, rt.graph.total_weight_bytes,
+            self.hw.hbm_bytes_per_cycle)
+        rt.pause_until_s = max(rt.pause_until_s,
+                               now + pause_cycles / self.hw.freq_hz)
+        self._tenant_moved(rt)
+
     # -- time accounting ---------------------------------------------------
     def _advance(self, now: float) -> None:
         """Integrate utilization and per-tenant served iterations from the
-        last event to ``now`` (seconds).  O(residents) plus at most one
-        scoring pass."""
+        last event to ``now`` (seconds), and advance every serving tenant's
+        continuous-batching server through its active window.  O(residents)
+        plus at most one scoring pass plus the serving segments."""
         dt = now - self._last_t
         if dt <= 0:
             return
         self.metrics.util_integral += self.policy.utilization() * dt
+        streamers = self._n_streamers() if self.plane is not None else 1
         for tid, rt in self._residents.items():
             active = dt
             if rt.pause_until_s > self._last_t:
                 active -= min(rt.pause_until_s, now) - self._last_t
             if active > 0:
                 rt.served_iterations += self._fps(tid) * active
+            if self.plane is not None and self.plane.is_attached(tid):
+                w0 = max(self._last_t, min(rt.pause_until_s, now))
+                if now > w0:
+                    self.plane.advance(tid, w0, now,
+                                       self._phase_model(rt, streamers))
         self._last_t = now
 
     # -- admission ---------------------------------------------------------
@@ -462,6 +751,11 @@ class ClusterScheduler:
             admit_s=now, depart_s=now + spec.duration_s)
         self._residents[spec.tid] = rt
         self._tenant_admitted(rt)
+        if self.plane is not None and self.plane.attach(
+                spec.tid, spec.model, spec.arrival_s, now, rt.depart_s):
+            self._resize_state[spec.tid] = _ResizeState(
+                orig_n_cores=spec.n_cores)
+            self._phase_cache.clear()    # decode HBM-client count changed
         evq.push(rt.depart_s, DEPARTURE, tid=spec.tid)
         self.metrics.n_admitted += 1
         self.metrics.queue_waits_s.append(now - spec.arrival_s)
@@ -546,6 +840,26 @@ class ClusterScheduler:
                 kept.append((spec, enq))
         self._waiting = kept
 
+    def _admission_order(self) -> List[Tuple[TenantSpec, float]]:
+        """The queue in drain order.  ``admission="fifo"`` keeps arrival
+        order (with backfill); ``admission="sla"`` drains earliest-deadline
+        first, where a serving tenant's deadline is tightened by its
+        *predicted TTFT at current load* — the plane's observed prefill
+        rate applied to the profile's mean prompt — so tenants whose first
+        request would otherwise blow its TTFT target are placed (and
+        defragmented for) ahead of slack-rich ones."""
+        if self.admission != "sla":
+            return self._waiting
+        def deadline(item):
+            spec, _ = item
+            d = spec.arrival_s + spec.sla_wait_s
+            if self.plane is not None:
+                profile = get_profile(spec.model)
+                if profile is not None:
+                    d -= self.plane.predicted_prefill_s(profile)
+            return (d, spec.arrival_s, spec.tid)
+        return sorted(self._waiting, key=deadline)
+
     def _drain_queue(self, now: float, evq: EventQueue) -> None:
         """Admit as many waiting tenants as now fit (FIFO with backfill);
         one defrag attempt on behalf of the queue head.
@@ -557,7 +871,7 @@ class ClusterScheduler:
         probes are pure functions of the pool, pinned by the CI gate)."""
         self._expire_waiting(now)
         still: List[Tuple[TenantSpec, float]] = []
-        for i, (spec, enq) in enumerate(self._waiting):
+        for i, (spec, enq) in enumerate(self._admission_order()):
             defrag_now = i == 0 and self.defrag
             if self.probe_memo and self._probe_skip(spec, defrag_now):
                 self.metrics.n_probe_skips += 1
@@ -644,6 +958,12 @@ class ClusterScheduler:
             elif ev.kind == DEPARTURE:
                 rt = self._residents.pop(ev.tid, None)
                 if rt is not None:
+                    if self.plane is not None and \
+                            self.plane.is_attached(ev.tid):
+                        self._fold_records(rt.spec.model,
+                                           self.plane.detach(ev.tid))
+                        self._resize_state.pop(ev.tid, None)
+                        self._phase_cache.clear()
                     self.policy.release(rt.placement)
                     self._tenant_departed(ev.tid)
                     self.metrics.tenant_iterations[ev.tid] = \
@@ -654,6 +974,9 @@ class ClusterScheduler:
             elif ev.kind == FAILURE:
                 self._fail_cores(ev.cores, now)
                 self._drain_queue(now, evq)
+            elif ev.kind == RESIZE:
+                self._do_resize(ev, now)
+                self._drain_queue(now, evq)   # a shrink freed cores
             elif ev.kind == EPOCH:
                 self._drain_queue(now, evq)
                 self._ensure_scores()
@@ -663,6 +986,8 @@ class ClusterScheduler:
                     n_resident=len(self._residents),
                     n_queued=len(self._waiting),
                     agg_fps=sum(self._fps(t) for t in self._residents)))
+                if self.plane is not None:
+                    self._check_pressure(now, evq)
                 # re-arm while the system still has work in flight
                 if evq:
                     evq.push(now + self.epoch_s, EPOCH)

@@ -18,11 +18,15 @@ ARRIVAL = "arrival"
 DEPARTURE = "departure"
 EPOCH = "epoch"
 FAILURE = "failure"               # dead cores: quarantine + migrate residents
+RESIZE = "resize"                 # elastic vNPU grow/shrink (serving plane)
 
 # same-timestamp processing order: free cores, then fail hardware, then
-# observe, then admit — a departure at the same instant as a failure frees
-# its cores before the quarantine, and an arrival sees the post-failure mesh
-_KIND_PRIORITY = {DEPARTURE: 0, FAILURE: 1, EPOCH: 2, ARRIVAL: 3}
+# observe, then admit, then resize — a departure at the same instant as a
+# failure frees its cores before the quarantine, an arrival sees the
+# post-failure mesh, and a RESIZE pushed by an epoch's pressure check runs
+# after that instant's admissions so growth never races a same-tick
+# arrival for cores
+_KIND_PRIORITY = {DEPARTURE: 0, FAILURE: 1, EPOCH: 2, ARRIVAL: 3, RESIZE: 4}
 
 
 @dataclasses.dataclass
@@ -46,9 +50,10 @@ class TenantSpec:
 
 @dataclasses.dataclass(order=True)
 class Event:
-    """One scheduled occurrence.  ``time`` is wall-clock seconds; exactly
-    one payload field is set per kind: ``spec`` (arrival), ``tid``
-    (departure) or ``cores`` (failure — the physical core ids that died)."""
+    """One scheduled occurrence.  ``time`` is wall-clock seconds; the
+    payload fields per kind: ``spec`` (arrival), ``tid`` (departure),
+    ``cores`` (failure — the physical core ids that died) or
+    ``tid`` + ``n_cores`` (resize — the elastic target size)."""
     time: float
     priority: int
     seq: int
@@ -56,6 +61,7 @@ class Event:
     spec: Optional[TenantSpec] = dataclasses.field(compare=False, default=None)
     tid: Optional[int] = dataclasses.field(compare=False, default=None)
     cores: Optional[tuple] = dataclasses.field(compare=False, default=None)
+    n_cores: Optional[int] = dataclasses.field(compare=False, default=None)
 
 
 class EventQueue:
@@ -69,11 +75,12 @@ class EventQueue:
     def push(self, time: float, kind: str,
              spec: Optional[TenantSpec] = None,
              tid: Optional[int] = None,
-             cores: Optional[tuple] = None) -> Event:
+             cores: Optional[tuple] = None,
+             n_cores: Optional[int] = None) -> Event:
         """Schedule ``kind`` at ``time`` (seconds) with its payload."""
         ev = Event(time=time, priority=_KIND_PRIORITY.get(kind, 9),
                    seq=next(self._seq), kind=kind, spec=spec, tid=tid,
-                   cores=cores)
+                   cores=cores, n_cores=n_cores)
         heapq.heappush(self._heap, ev)
         return ev
 

@@ -109,6 +109,24 @@ class PlacementPolicy:
         again.  Policies without that notion ignore the report; callers
         should still ``migrate(placement, avoid=cores)`` affected tenants."""
 
+    def resize(self, placement: Placement,
+               new_n_cores: int) -> Tuple[Placement, bool]:
+        """Elastic resize: grow or shrink a *live* tenant to
+        ``new_n_cores`` cores, preserving its memory contents.  Returns
+        ``(placement, resized)``; the default (and MIG, whose partitions
+        are fixed) cannot resize.  Callers charge the scratchpad re-warm
+        pause like a migration."""
+        return placement, False
+
+    def request_key(self, spec: TenantSpec) -> Tuple:
+        """Hashable identity of what ``allocate`` reads from a spec — the
+        scheduler's negative-probe memo key.  Default: the size class
+        ``(n_cores, memory_bytes, bandwidth_cap)``.  Policies that map a
+        *topology* (vNPU) refine this with the request's canonical shape
+        key, so two asks that build different topologies never share a
+        memo entry even if their size classes collide."""
+        return (spec.n_cores, spec.memory_bytes, spec.bandwidth_cap)
+
     def free_state_token(self):
         """Hashable token that is equal between two policy states iff
         ``allocate`` is guaranteed to give the same success/failure for the
@@ -163,6 +181,7 @@ class VNPUPolicy(PlacementPolicy):
         self.hyp = hypervisor or Hypervisor(topo, hbm_bytes=hbm_bytes)
         self.require_connected = require_connected
         self.mapper = mapper
+        self._shape_keys: Dict[int, Tuple] = {}   # n_cores -> canonical key
 
     def _request(self, spec: TenantSpec, strict: bool) -> VNPURequest:
         """Translate a tenant spec into the hypervisor's request form (the
@@ -211,6 +230,42 @@ class VNPUPolicy(PlacementPolicy):
         a big-enough component exists; relaxed: enough free cores) and
         memory feasibility of the buddy's free-size multiset alone."""
         return (self.hyp.engine.free_state_id(), self.hyp.buddy.state_key())
+
+    def request_key(self, spec: TenantSpec) -> Tuple:
+        """Probe-memo key refined with the *request canonical shape*: the
+        translation-normalized signature of the topology ``allocate``
+        would build (the same ``req_sig.key`` the engine's TED cache
+        addresses by).  For today's ``best_rect`` requests this is a
+        function of ``n_cores``, but a future heterogeneous-topology
+        request with an equal size class would mint a distinct key instead
+        of aliasing the memo (ROADMAP fast-path follow-up)."""
+        shape = self._shape_keys.get(spec.n_cores)
+        if shape is None:
+            from ..core.engine.regions import component_signature
+            t = mesh_2d(*best_rect(spec.n_cores), base_id=10_000)
+            shape = component_signature(t, t.node_attrs, t._adj(),
+                                        symmetry=False).key
+            self._shape_keys[spec.n_cores] = shape
+        return (shape, spec.memory_bytes, spec.bandwidth_cap)
+
+    def resize(self, placement: Placement,
+               new_n_cores: int) -> Tuple[Placement, bool]:
+        """Elastic grow/shrink through ``Hypervisor.resize_vnpu`` (the
+        remap machinery with the tenant's own cores counted free); memory
+        (RTT) is preserved.  ``moved=False`` when no sub-topology of the
+        new size exists — the tenant keeps running unchanged."""
+        if new_n_cores == placement.n_cores:
+            return placement, False
+        topo_req = mesh_2d(*best_rect(new_n_cores), base_id=10_000)
+        try:
+            vnpu = self.hyp.resize_vnpu(
+                placement.handle, topo_req,
+                node_match=mem_dist_node_match(0.5))
+        except AllocationError:
+            return placement, False
+        new = dataclasses.replace(
+            placement, cores=tuple(sorted(vnpu.p_cores)), vnpu=vnpu)
+        return self._register(new), True
 
     def release(self, placement: Placement) -> None:
         """Destroy the vNPU: cores rejoin the free set (O(component) region
@@ -371,6 +426,31 @@ class UVMPolicy(PlacementPolicy):
             return placement, False
         self.uvm.release(bad)
         cores = frozenset(set(placement.cores) - bad) | repl
+        new = dataclasses.replace(placement, cores=tuple(sorted(cores)),
+                                  handle=cores)
+        return self._register(new), True
+
+    def resize(self, placement: Placement,
+               new_n_cores: int) -> Tuple[Placement, bool]:
+        """Topology-blind elastic resize: grow takes any free cores,
+        shrink releases the highest-numbered ones (allocations are exact
+        sets, so either direction is O(delta))."""
+        cur = set(placement.cores)
+        delta = new_n_cores - len(cur)
+        if delta == 0:
+            return placement, False
+        if delta > 0:
+            try:
+                extra = self.uvm.allocate(delta)
+            except AllocationError:
+                return placement, False
+            cores = frozenset(cur | set(extra))
+        else:
+            if new_n_cores < 1:
+                return placement, False
+            drop = set(sorted(cur)[new_n_cores:])
+            self.uvm.release(drop)
+            cores = frozenset(cur - drop)
         new = dataclasses.replace(placement, cores=tuple(sorted(cores)),
                                   handle=cores)
         return self._register(new), True

@@ -9,8 +9,10 @@ become a tensor-parallel transformer graph the simulator can score).
 Named families (``TRACES``): ``mixed`` / ``small`` / ``large`` /
 ``bursty`` target the paper's 6x6 SIM config; ``pod-mixed`` carries
 pod-matched arrival rates and 2–48-core asks for 16x16–32x32 meshes (the
-README table lists rates and intended ``--mesh`` sizes).  All times are
-seconds; traces are deterministic per seed.
+README table lists rates and intended ``--mesh`` sizes); ``serving`` is
+the LLM-only mix for the request-level serving plane (every tenant has a
+:mod:`repro.serve.requests` profile and a KV-arena memory grant; intended
+mesh 8x8).  All times are seconds; traces are deterministic per seed.
 """
 from __future__ import annotations
 
@@ -69,11 +71,14 @@ def get_serving_workload(name: str) -> W.WorkloadGraph:
 @dataclasses.dataclass
 class CatalogEntry:
     """One tenant class: which model, how many cores it may ask for, its
-    admission SLA, and its sampling weight in the mix."""
+    admission SLA, and its sampling weight in the mix.
+    ``extra_memory_bytes`` is added on top of the model's weight footprint
+    (the serving catalog grants each LLM tenant its KV arena this way)."""
     model: str
     cores: Tuple[int, ...]
     sla_wait_s: float = 30.0
     weight: float = 1.0
+    extra_memory_bytes: int = 0
 
 
 # The mixed cloud catalog: small CNN inference, mid-size detection,
@@ -121,6 +126,40 @@ POD_CATALOG: Tuple[CatalogEntry, ...] = (
     CatalogEntry("gpt2_small", (16, 25), sla_wait_s=45.0, weight=0.75),
     CatalogEntry("gpt2_medium", (24, 36), sla_wait_s=60.0, weight=0.5),
     CatalogEntry("qwen2_7b", (32, 48), sla_wait_s=90.0, weight=0.25),
+)
+
+
+def _kv_arena(model: str) -> int:
+    """The model's serving KV-arena grant (see repro.serve.requests)."""
+    from ..serve.requests import get_profile
+    profile = get_profile(model)
+    return profile.kv_arena_bytes if profile else 0
+
+
+# LLM-serving mix for the request-level serving plane (benchmarks/
+# serving_sim.py): every tenant has a ServeProfile, asks for its weights
+# plus a KV arena, and serves a prefill/decode-mixed request stream
+# (chat-style decode-heavy + doc-style prefill-heavy, see
+# repro.serve.requests).  Small models dominate the mix (the realistic
+# serving population — and the regime where MIG's fixed slices waste
+# cores while vNPU packs).  Rates target an 8x8 mesh: mean demand
+# ~0.4/s x ~6.5 cores x 35 s ~= 90 demanded cores against 64 — a heavy
+# multi-tenant overload (~14 concurrent tenants wanted) that exercises
+# queueing, elastic resize, KV pressure, and the regime where a fixed
+# 8-slice MIG carve caps concurrency while vNPU keeps packing.
+SERVING_CATALOG: Tuple[CatalogEntry, ...] = (
+    CatalogEntry("transformer", (2, 3), sla_wait_s=6.0, weight=3.0,
+                 extra_memory_bytes=_kv_arena("transformer")),
+    CatalogEntry("qwen2_0_5b", (4, 6), sla_wait_s=8.0, weight=3.0,
+                 extra_memory_bytes=_kv_arena("qwen2_0_5b")),
+    CatalogEntry("llama3_2_1b", (6, 9), sla_wait_s=12.0, weight=1.0,
+                 extra_memory_bytes=_kv_arena("llama3_2_1b")),
+    CatalogEntry("gpt2_small", (8, 12), sla_wait_s=15.0, weight=0.75,
+                 extra_memory_bytes=_kv_arena("gpt2_small")),
+    CatalogEntry("gpt2_medium", (12, 16), sla_wait_s=20.0, weight=0.4,
+                 extra_memory_bytes=_kv_arena("gpt2_medium")),
+    CatalogEntry("qwen2_7b", (16,), sla_wait_s=30.0, weight=0.2,
+                 extra_memory_bytes=_kv_arena("qwen2_7b")),
 )
 
 
@@ -194,7 +233,8 @@ def poisson_trace(cfg: TraceConfig) -> List[TenantSpec]:
         specs.append(TenantSpec(
             tid=tid, model=entry.model, n_cores=n_cores, arrival_s=t,
             duration_s=duration,
-            memory_bytes=max(graph.total_weight_bytes, 1 << 20),
+            memory_bytes=max(graph.total_weight_bytes, 1 << 20)
+            + entry.extra_memory_bytes,
             sla_wait_s=entry.sla_wait_s))
         tid += 1
     return specs
@@ -212,6 +252,9 @@ TRACES: Dict[str, TraceConfig] = {
                              rate_per_s=2.2, service_mean_s=30.0,
                              horizon_s=90.0,
                              intended_mesh="16x16-32x32"),
+    "serving": TraceConfig(name="serving", catalog=SERVING_CATALOG,
+                           rate_per_s=0.4, service_mean_s=35.0,
+                           horizon_s=120.0, intended_mesh="8x8"),
 }
 
 

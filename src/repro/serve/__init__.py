@@ -1,1 +1,40 @@
-from .engine import ServeEngine, EngineConfig, Request, seed_decode_cache
+"""Serving: the real batched engine and the request-level serving plane.
+
+Two halves share this package:
+
+* :mod:`repro.serve.engine` — :class:`ServeEngine`, the *runnable* batched
+  prefill/decode loop over a JAX ModelBundle (CPU-testable; imports jax);
+* the **serving plane** (:mod:`~repro.serve.requests`,
+  :mod:`~repro.serve.kv`, :mod:`~repro.serve.plane`) — the analytic
+  request-level simulation the cluster scheduler drives: per-model request
+  streams, KV-cache occupancy over a real buddy arena, and continuous
+  batching at phase-aware (prefill/decode) rates.  These modules are
+  jax-free; ``tests/test_serving.py`` cross-checks the analytic decode
+  rate against a real ``ServeEngine`` run.
+
+``ServeEngine`` and friends are imported lazily so that scheduler runs and
+benchmarks using only the plane never pay the jax import.
+"""
+from .kv import KVStats, TenantKV
+from .plane import (PressureSignals, RequestRecord, ServingPlane,
+                    TenantServer)
+from .requests import (RequestClass, RequestSpec, SERVE_PROFILES,
+                       ServeProfile, get_profile, sample_requests)
+
+_ENGINE_EXPORTS = ("ServeEngine", "EngineConfig", "Request",
+                   "seed_decode_cache")
+
+__all__ = [
+    "KVStats", "TenantKV",
+    "PressureSignals", "RequestRecord", "ServingPlane", "TenantServer",
+    "RequestClass", "RequestSpec", "SERVE_PROFILES", "ServeProfile",
+    "get_profile", "sample_requests",
+    *_ENGINE_EXPORTS,
+]
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,433 @@
+"""The ServingPlane: request-level continuous batching per resident tenant.
+
+Sits between the cluster scheduler's event loop and the analytic
+simulator: each resident LLM tenant gets a :class:`TenantServer` that
+replays its (deterministic, per-tenant-seeded) request stream through a
+continuous-batching loop —
+
+* **prefill** passes admit pending requests into free batch slots (KV
+  blocks permitting — admission charges the *real*
+  :class:`~repro.core.buddy.BuddyAllocator` arena via
+  :class:`~repro.serve.kv.TenantKV`) and produce each request's first
+  token; while a prefill is in flight decode pauses, which is exactly the
+  TTFT-vs-TPOT interference phase-aware schedulers exploit;
+* **decode** advances every active slot one token per step at the
+  bandwidth-bound step time of the tenant's current
+  :class:`~repro.core.simulator.PhaseModel` (weights streaming when the
+  shards don't fit in aggregate scratchpad, live KV bytes, RTT-walk
+  stalls, contention-scaled all-reduce); KV growth past a block boundary
+  can hit real OOM, preempting the youngest request vLLM-style
+  (free-and-recompute);
+* the math is segment-analytic, not token-discrete: between scheduler
+  events the server advances in closed form to the next boundary (request
+  arrival, prefill completion, earliest slot completion, window end), so
+  cost is O(requests x segments), independent of token counts.
+
+The scheduler drives one :class:`ServingPlane` per run (`attach` on
+admission, `advance` from its time-integration hook, `pressure` for the
+elastic-resize signals, `detach` on departure) and folds the per-request
+TTFT/TPOT/goodput records into :class:`~repro.sched.cluster.ClusterMetrics`.
+Everything is deterministic for a given (trace seed, tenant id).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from ..core.simulator import PhaseModel
+from .kv import TenantKV
+from .requests import (RequestSpec, ServeProfile, get_profile,
+                       sample_requests)
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's measured life (times absolute seconds; a request the
+    tenant departed on keeps ``done_s=None`` and counts as incomplete)."""
+    tid: int
+    rid: int
+    cls: str
+    arrival_s: float
+    prompt_tokens: int
+    target_tokens: int
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+    tokens_out: int = 0
+    preempts: int = 0
+
+    @property
+    def completed(self) -> bool:
+        return self.done_s is not None
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token (inf when the request never prefilled)."""
+        if self.first_token_s is None:
+            return math.inf
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> float:
+        """Mean time per output token after the first (0 for 1-token
+        requests; inf when incomplete)."""
+        if not self.completed:
+            return math.inf
+        if self.target_tokens <= 1:
+            return 0.0
+        return (self.done_s - self.first_token_s) / (self.target_tokens - 1)
+
+    def sla_good(self, ttft_slo_s: float, tpot_slo_s: float) -> bool:
+        """Did this request meet both latency targets?"""
+        return (self.completed and self.ttft_s <= ttft_slo_s
+                and self.tpot_s <= tpot_slo_s)
+
+
+@dataclasses.dataclass
+class PressureSignals:
+    """What the scheduler's resize controller reads each epoch."""
+    queue_depth: int              # requests waiting for a batch slot
+    kv_occupancy: float           # fraction of the KV arena in use
+    batch_fill: float             # active slots / max_batch
+    kv_blocked: bool              # an admission was deferred on KV OOM
+
+
+@dataclasses.dataclass
+class _Pending:
+    spec: RequestSpec
+    arrival_s: float
+    preempts: int = 0
+
+
+@dataclasses.dataclass
+class _Active:
+    rec: RequestRecord
+    spec: RequestSpec
+    ctx_tokens: float             # prompt + produced (fractional mid-segment)
+    produced: float               # output tokens produced so far
+
+
+@dataclasses.dataclass
+class _Prefill:
+    entries: List[_Pending]
+    tokens_left: float
+
+
+class TenantServer:
+    """Continuous batching for one resident tenant (see module docstring)."""
+
+    def __init__(self, tid: int, profile: ServeProfile,
+                 stream: List[RequestSpec], arrival_s: float,
+                 admit_s: float, depart_s: float):
+        self.tid = tid
+        self.profile = profile
+        self.kv = TenantKV(profile.kv_arena_bytes, profile.kv_block_bytes,
+                           profile.kv_bytes_per_token)
+        # requests arrive relative to the tenant's *arrival*, not its
+        # admission: anything that arrived while the tenant waited in the
+        # cluster queue is backlogged at admit, and its TTFT includes the
+        # admission wait — queueing latency is request latency
+        self.arrival_s = arrival_s
+        self.admit_s = admit_s
+        self.depart_s = depart_s
+        self._stream = stream
+        self._next = 0
+        self.t = admit_s
+        self.pending: Deque[_Pending] = deque()
+        self.prefill: Optional[_Prefill] = None
+        self.active: List[_Active] = []
+        self.records: List[RequestRecord] = []
+        self.kv_blocked = False
+        self.n_dropped = 0            # requests bigger than the whole arena
+
+    # -- arrival stream ------------------------------------------------------
+    def _peek_arrival(self) -> Optional[float]:
+        if self._next >= len(self._stream):
+            return None
+        return self.arrival_s + self._stream[self._next].t_s
+
+    def _ingest(self, t: float) -> None:
+        while self._next < len(self._stream) and \
+                self.arrival_s + self._stream[self._next].t_s <= t + _EPS:
+            spec = self._stream[self._next]
+            self.pending.append(_Pending(
+                spec=spec, arrival_s=self.arrival_s + spec.t_s))
+            self._next += 1
+
+    # -- bookkeeping ---------------------------------------------------------
+    def _make_record(self, e: _Pending) -> RequestRecord:
+        return RequestRecord(
+            tid=self.tid, rid=e.spec.rid, cls=e.spec.cls,
+            arrival_s=e.arrival_s, prompt_tokens=e.spec.prompt_tokens,
+            target_tokens=e.spec.max_new_tokens, preempts=e.preempts)
+
+    def _censor(self, e: _Pending) -> None:
+        """Record a request that will never be served (dropped, or in
+        flight / still queued at tenant departure) unless it already has a
+        record from an earlier activation."""
+        if not any(r.rid == e.spec.rid for r in self.records):
+            self.records.append(self._make_record(e))
+
+    def _activate(self, e: _Pending, first_token_s: float) -> None:
+        rec = self._make_record(e)
+        if e.preempts:
+            # a preempted request keeps its original record (first token
+            # already served once; recompute regenerates the rest)
+            for r in self.records:
+                if r.rid == e.spec.rid:
+                    rec = r
+                    rec.preempts = e.preempts
+                    break
+            else:
+                self.records.append(rec)
+        else:
+            self.records.append(rec)
+        if rec.first_token_s is None:
+            rec.first_token_s = first_token_s
+        self.active.append(_Active(rec=rec, spec=e.spec,
+                                   ctx_tokens=float(e.spec.prompt_tokens + 1),
+                                   produced=1.0))
+
+    def _finalize(self, a: _Active, t: float) -> None:
+        a.rec.done_s = t
+        a.rec.tokens_out = a.spec.max_new_tokens
+        self.kv.release(a.spec.rid)
+        self.kv_blocked = False
+
+    def _preempt_youngest(self) -> bool:
+        """KV grow OOM: evict the youngest active request (latest arrival,
+        highest rid tiebreak) for free-and-recompute re-admission."""
+        if not self.active:
+            return False
+        victim = max(self.active,
+                     key=lambda a: (a.rec.arrival_s, a.spec.rid))
+        self.active.remove(victim)
+        self.kv.release(victim.spec.rid)
+        self.kv_blocked = False
+        self.pending.appendleft(_Pending(
+            spec=victim.spec, arrival_s=victim.rec.arrival_s,
+            preempts=victim.rec.preempts + 1))
+        victim.rec.preempts += 1
+        return True
+
+    def _admit_pending(self) -> List[_Pending]:
+        """Move pending requests into a prefill batch while slots and KV
+        blocks last.  A request that cannot fit in an *empty* arena is
+        dropped (it could never be served)."""
+        batch: List[_Pending] = []
+        while self.pending and \
+                len(self.active) + len(batch) < self.profile.max_batch:
+            e = self.pending[0]
+            # a request whose *full* context (prompt + every output
+            # token) can never fit the arena is unserveable: admitting it
+            # would loop admit -> grow-OOM -> self-preempt forever
+            if not self.kv.fits_arena(e.spec.prompt_tokens
+                                      + e.spec.max_new_tokens):
+                self.pending.popleft()
+                self._censor(e)
+                self.n_dropped += 1
+                continue
+            if self.kv.try_admit(e.spec.rid, e.spec.prompt_tokens + 1):
+                self.pending.popleft()
+                batch.append(e)
+                continue
+            self.kv_blocked = True
+            break
+        return batch
+
+    # -- the micro event loop ------------------------------------------------
+    def advance(self, t0: float, t1: float, phase: PhaseModel) -> None:
+        """Advance the server through the active window ``[t0, t1)`` under
+        the given phase rates (constant within a scheduler window)."""
+        t = max(self.t, t0)
+        if t1 <= t + _EPS:
+            self.t = max(self.t, t1)
+            return
+        max_iters = 1000 + 50 * len(self._stream)
+        iters = 0
+        while t < t1 - _EPS:
+            iters += 1
+            if iters > max_iters:
+                raise RuntimeError(
+                    f"TenantServer {self.tid}: micro loop did not converge "
+                    f"(t={t}, window=({t0}, {t1}))")
+            self._ingest(t)
+            # start a prefill pass when slots and requests are available
+            if self.prefill is None:
+                batch = self._admit_pending()
+                if batch:
+                    self.prefill = _Prefill(
+                        entries=batch,
+                        tokens_left=float(sum(e.spec.prompt_tokens
+                                              for e in batch)))
+            if self.prefill is not None:
+                need_s = self.prefill.tokens_left / phase.prefill_tokens_per_s
+                if t + need_s <= t1:
+                    t += need_s
+                    for e in self.prefill.entries:
+                        self._activate(e, first_token_s=t)
+                    self.prefill = None
+                    continue
+                self.prefill.tokens_left -= \
+                    (t1 - t) * phase.prefill_tokens_per_s
+                t = t1
+                break
+            if self.active:
+                t = self._decode_segment(t, t1, phase)
+                continue
+            nxt = self._peek_arrival()
+            if nxt is None or nxt >= t1:
+                t = t1
+                break
+            t = nxt
+        self.t = max(self.t, t1)
+
+    def _decode_segment(self, t: float, t1: float,
+                        phase: PhaseModel) -> float:
+        """One closed-form decode segment: everybody gains ``dtok`` tokens,
+        where the segment ends at the earliest of window end, a request
+        arrival that could start a prefill, or the earliest completion."""
+        rids = [a.spec.rid for a in self.active]
+        kv_bytes = sum(a.ctx_tokens for a in self.active) * \
+            self.kv.kv_bytes_per_token
+        step_s = max(phase.decode_step_s(kv_bytes,
+                                         self.kv.stall_ranges(rids)), 1e-9)
+        boundary = t1
+        if len(self.active) < self.profile.max_batch:
+            nxt = self._peek_arrival()
+            if nxt is not None and t < nxt < boundary:
+                boundary = nxt
+        min_rem = min(a.spec.max_new_tokens - a.produced
+                      for a in self.active)
+        t_complete = t + min_rem * step_s
+        if t_complete <= boundary + _EPS:
+            end, dtok = t_complete, min_rem
+        else:
+            end, dtok = boundary, (boundary - t) / step_s
+        # KV growth for this segment's token gain — real buddy allocation,
+        # preempting the youngest slot on OOM and re-planning the segment
+        preempted = False
+        for a in list(self.active):
+            if a not in self.active:
+                continue                        # preempted by an earlier grow
+            need = int(math.ceil(a.ctx_tokens + dtok))
+            while not self.kv.try_grow(a.spec.rid, need):
+                if not self._preempt_youngest():
+                    break
+                preempted = True
+                if a not in self.active:       # preempted itself
+                    break
+        if preempted:
+            # any eviction stales the plan (step time, min_rem and the
+            # boundary were computed with the victim in the batch)
+            return t
+        for a in self.active:
+            a.ctx_tokens += dtok
+            a.produced += dtok
+        done = [a for a in self.active
+                if a.produced >= a.spec.max_new_tokens - 1e-9]
+        for a in done:
+            self.active.remove(a)
+            self._finalize(a, end)
+        return end
+
+    # -- scheduler-facing ----------------------------------------------------
+    def pressure(self) -> PressureSignals:
+        return PressureSignals(
+            queue_depth=len(self.pending),
+            kv_occupancy=self.kv.occupancy(),
+            batch_fill=len(self.active) / max(self.profile.max_batch, 1),
+            kv_blocked=self.kv_blocked)
+
+    def finish(self) -> List[RequestRecord]:
+        """Tenant departed: censor everything in flight — including stream
+        entries never ingested because a pause covered the final window
+        (every sampled request must appear in exactly one record, whatever
+        the policy's pause pattern) — and release KV."""
+        self._ingest(self.depart_s)
+        if self.prefill is not None:
+            for e in self.prefill.entries:
+                self._censor(e)
+            self.prefill = None
+        for a in self.active:
+            a.rec.tokens_out = int(a.produced)
+        for e in self.pending:
+            self._censor(e)
+        self.active = []
+        self.pending.clear()
+        self.kv.release_all()
+        return self.records
+
+
+class ServingPlane:
+    """All resident tenant servers of one scheduler run."""
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.servers: Dict[int, TenantServer] = {}
+        # EWMA of observed prefill rates (tokens/s) across every advance —
+        # the scheduler's SLA-aware admission predicts a queued tenant's
+        # TTFT at *current* load from this
+        self._prefill_rate_ewma = 0.0
+
+    # number of residents streaming from HBM during decode — every
+    # attached server shares the port (the phase model's
+    # ``decode_hbm_clients``)
+    @property
+    def n_attached(self) -> int:
+        return len(self.servers)
+
+    def request_seed(self, tid: int) -> int:
+        return (self.seed * 1_000_003 + tid) & 0x7FFFFFFF
+
+    def attach(self, tid: int, model: str, arrival_s: float, admit_s: float,
+               depart_s: float) -> bool:
+        """Start serving a newly-admitted tenant.  Returns False (no-op)
+        for models without a serving profile (CNN frame tenants).  The
+        request stream spans the tenant's service duration but is anchored
+        at its cluster *arrival* — requests that arrived during the
+        admission wait are backlogged, so queue latency surfaces as TTFT.
+        """
+        profile = get_profile(model)
+        if profile is None:
+            return False
+        stream = sample_requests(profile, depart_s - admit_s,
+                                 self.request_seed(tid))
+        self.servers[tid] = TenantServer(tid, profile, stream, arrival_s,
+                                         admit_s, depart_s)
+        return True
+
+    def is_attached(self, tid: int) -> bool:
+        return tid in self.servers
+
+    def advance(self, tid: int, t0: float, t1: float,
+                phase: PhaseModel) -> None:
+        r = phase.prefill_tokens_per_s
+        self._prefill_rate_ewma = r if self._prefill_rate_ewma == 0.0 \
+            else 0.9 * self._prefill_rate_ewma + 0.1 * r
+        self.servers[tid].advance(t0, t1, phase)
+
+    def predicted_prefill_s(self, profile: ServeProfile) -> float:
+        """Predicted TTFT contribution of one mean-sized prompt at the
+        currently-observed cluster prefill rate (0 before any window ran):
+        what SLA-aware admission subtracts from a queued tenant's
+        deadline."""
+        if self._prefill_rate_ewma <= 0.0:
+            return 0.0
+        w = sum(c.weight for c in profile.classes)
+        mean_prompt = sum(c.weight * c.prompt_mean
+                          for c in profile.classes) / max(w, 1e-9)
+        return mean_prompt / self._prefill_rate_ewma
+
+    def pressure(self, tid: int) -> PressureSignals:
+        return self.servers[tid].pressure()
+
+    def detach(self, tid: int) -> TenantServer:
+        """Tenant departed: finalize its in-flight requests, release the KV
+        arena, and return the (finished) server for metrics folding."""
+        server = self.servers.pop(tid)
+        server.finish()
+        return server

@@ -194,6 +194,51 @@ class TestProbeMemo:
         assert sched.probe_memo
 
 
+class TestRequestShapeMemoKey:
+    """ROADMAP fast-path follow-up: vNPU's probe-memo key carries the
+    *request canonical shape*, not just the (n_cores, mem, bw) size class,
+    so heterogeneous-topology asks with colliding size classes can never
+    alias a memo entry."""
+
+    def test_vnpu_key_is_canonical_shape(self):
+        pol = make_policy("vnpu", mesh_2d(6, 6))
+        mk = lambda n, mem=64 << 20: TenantSpec(
+            tid=0, model="resnet18", n_cores=n, arrival_s=0.0,
+            duration_s=1.0, memory_bytes=mem)
+        k4, k4b = pol.request_key(mk(4)), pol.request_key(mk(4))
+        assert k4 == k4b                       # stable per shape
+        k6, k8 = pol.request_key(mk(6)), pol.request_key(mk(8))
+        # different best_rect shapes mint different shape keys even though
+        # memory and bandwidth agree
+        assert len({k4[0], k6[0], k8[0]}) == 3
+        # shape equal but memory differing still splits the key
+        assert k4 != pol.request_key(mk(4, mem=128 << 20))
+        # and the shape component is the engine's canonical signature key
+        # (translation-normalized), not the raw core count
+        assert k4[0] != 4
+
+    def test_default_policies_keep_size_class(self):
+        for name in ("mig", "uvm"):
+            pol = make_policy(name, mesh_2d(6, 6))
+            spec = TenantSpec(tid=0, model="resnet18", n_cores=6,
+                              arrival_s=0.0, duration_s=1.0,
+                              memory_bytes=1 << 20, bandwidth_cap=None)
+            assert pol.request_key(spec) == (6, 1 << 20, None)
+
+    def test_shape_keyed_memo_bit_identity(self):
+        """The refined key must not change any schedule: memo on vs off
+        stays bit-identical on a congested trace (same oracle as
+        TestProbeMemo, pinned separately for the shape-keyed path)."""
+        trace = make_trace("mixed", seed=13, horizon_s=30.0)
+        sched_on, on = _run("vnpu", trace, probe_memo=True)
+        _, off = _run("vnpu", trace, probe_memo=False)
+        assert _trajectory(on) == _trajectory(off)
+        assert on.n_probe_skips > 0
+        # the live memo is keyed by canonical shape tuples
+        assert all(isinstance(k[0], tuple)
+                   for k in sched_on._probe_memo)
+
+
 # ---------------------------------------------------------------------------
 # buddy state digests (the memory half of the probe-memo token)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,522 @@
+"""Request-level serving plane: request sampling, KV arena, phase model,
+continuous batching, elastic vNPU resize, and the scheduler integration —
+plus the ServeEngine cross-check closing the ROADMAP item (simulated
+decode tokens/s vs a real CPU-backend run, pinned by a recorded
+calibration factor).
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests degrade, unit tests still run
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import mesh_2d
+from repro.core import simulator as S
+from repro.core.baselines import AllocationError
+from repro.core.hypervisor import Hypervisor, VNPURequest
+from repro.core.vchunk import RangeTLB
+from repro.sched import (ClusterScheduler, ServingConfig, make_policy,
+                         make_trace)
+from repro.sched.events import TenantSpec
+from repro.sched.policy import best_rect
+from repro.serve.kv import TenantKV
+from repro.serve.plane import ServingPlane, TenantServer
+from repro.serve.requests import (SERVE_PROFILES, get_profile,
+                                  sample_requests)
+
+
+# ---------------------------------------------------------------------------
+# request sampling
+# ---------------------------------------------------------------------------
+
+class TestRequestSampling:
+    def test_deterministic_per_seed(self):
+        prof = SERVE_PROFILES["qwen2_0_5b"]
+        a = sample_requests(prof, 30.0, seed=42)
+        b = sample_requests(prof, 30.0, seed=42)
+        assert a == b
+        c = sample_requests(prof, 30.0, seed=43)
+        assert a != c
+
+    def test_stream_shape(self):
+        prof = SERVE_PROFILES["llama3_2_1b"]
+        reqs = sample_requests(prof, 60.0, seed=0)
+        assert all(0 <= r.t_s < 60.0 for r in reqs)
+        assert all(r.t_s <= s.t_s for r, s in zip(reqs, reqs[1:]))
+        assert all(r.prompt_tokens >= 8 and r.max_new_tokens >= 2
+                   for r in reqs)
+        assert {r.cls for r in reqs} <= {"chat", "doc"}
+        # Poisson count in the right ballpark (rate * horizon)
+        expect = prof.rate_per_s * 60.0
+        assert 0.5 * expect < len(reqs) < 1.7 * expect
+
+
+# ---------------------------------------------------------------------------
+# KV arena over the real buddy allocator
+# ---------------------------------------------------------------------------
+
+class TestTenantKV:
+    def _kv(self, arena=32 << 20, block=1 << 20, bpt=16 << 10):
+        return TenantKV(arena, block, bpt)
+
+    def test_admit_release_roundtrip(self):
+        kv = self._kv()
+        free0 = kv.buddy.free_bytes()
+        assert kv.try_admit(1, 100)        # 100 tokens @16K = 2 blocks
+        assert kv.n_ranges(1) == 2
+        assert kv.capacity_tokens(1) >= 100
+        kv.buddy.check_invariants()
+        kv.release(1)
+        assert kv.buddy.free_bytes() == free0
+        kv.buddy.check_invariants()
+
+    def test_grow_and_oom_rollback(self):
+        kv = self._kv(arena=4 << 20)       # 4 blocks
+        assert kv.try_admit(1, 60)         # 1 block
+        assert kv.try_grow(1, 200)         # -> 4 blocks total? 200*16K=3.2M
+        assert kv.n_ranges(1) == 4
+        free_before = kv.buddy.free_bytes()
+        assert not kv.try_grow(1, 1000)    # would need far more than arena
+        assert kv.buddy.free_bytes() == free_before   # all-or-nothing
+        assert kv.stats.grow_oom == 1
+        kv.buddy.check_invariants()
+
+    def test_admit_oom_leaves_arena_untouched(self):
+        kv = self._kv(arena=2 << 20)
+        assert not kv.try_admit(1, 1000)
+        assert kv.stats.admit_oom == 1
+        assert kv.buddy.free_bytes() == kv.buddy.total
+        assert kv.occupancy() == 0.0
+
+    def test_rtt_walk_matches_analytic_stall_count(self):
+        """The phase model charges ``n_ranges`` RTT reads per decode step
+        (Pattern 2: the RTT_CUR cursor makes each miss a short walk).
+        Driving the *real* RangeTLB over the request's materialized RTT
+        must agree: one miss per range per sequential pass."""
+        kv = self._kv(arena=64 << 20, block=1 << 20, bpt=16 << 10)
+        assert kv.try_admit(7, 500)        # 500 tokens -> 8 x 1MiB ranges
+        n_ranges = kv.n_ranges(7)
+        assert n_ranges == 8
+        rtt = kv.rtt_for(7)
+        assert len(rtt.entries) == n_ranges
+        tlb = RangeTLB(rtt, n_entries=4)   # fewer entries than ranges
+        burst = 512
+        span = n_ranges << 20
+        for _ in range(2):                 # two decode passes over the KV
+            for va in range(0, span, burst << 4):
+                tlb.translate(va)
+        assert tlb.stats.misses == 2 * n_ranges
+        assert kv.stall_ranges([7]) == n_ranges
+
+    def test_release_all(self):
+        kv = self._kv()
+        for rid in range(4):
+            assert kv.try_admit(rid, 50)
+        kv.release_all()
+        assert kv.buddy.free_bytes() == kv.buddy.total
+
+
+# ---------------------------------------------------------------------------
+# phase model (simulator side)
+# ---------------------------------------------------------------------------
+
+class TestPhaseModel:
+    def _model(self, model, k, clients=1, topo=None):
+        from repro.sched.traces import get_serving_workload
+        topo = topo or mesh_2d(8, 8)
+        g = get_serving_workload(model)
+        sk = S.tensor_skeleton(g, list(range(k)), topo, S.SIM_CONFIG)
+        prof = get_profile(model)
+        return S.derive_phase_model(sk, S.finish_tensor(sk),
+                                    proxy_seq=prof.proxy_seq,
+                                    decode_hbm_clients=clients)
+
+    def test_prefill_is_fps_times_seq(self):
+        from repro.sched.traces import get_serving_workload
+        topo = mesh_2d(8, 8)
+        g = get_serving_workload("qwen2_0_5b")
+        sk = S.tensor_skeleton(g, [0, 1, 8, 9], topo, S.SIM_CONFIG)
+        rep = S.finish_tensor(sk)
+        pm = S.derive_phase_model(sk, rep, proxy_seq=512)
+        assert pm.prefill_tokens_per_s == pytest.approx(rep.fps * 512)
+
+    def test_weights_residency_speeds_decode(self):
+        """transformer's ~98 MB of shards fit in aggregate scratchpad at 7
+        cores but not at 4 — the structural payoff of elastic growth."""
+        small = self._model("transformer", 4)
+        big = self._model("transformer", 8)
+        assert not small.weights_resident and big.weights_resident
+        kv, ranges = 8 << 20, 10
+        assert big.decode_step_s(kv, ranges) < \
+            0.25 * small.decode_step_s(kv, ranges)
+
+    def test_hbm_sharing_slows_decode(self):
+        one = self._model("qwen2_0_5b", 6, clients=1)
+        four = self._model("qwen2_0_5b", 6, clients=4)
+        s1 = one.decode_step_s(1 << 20, 4)
+        s4 = four.decode_step_s(1 << 20, 4)
+        assert 3.0 < s4 / s1 < 4.5       # streaming is the dominant term
+
+    def test_rejects_pipeline_skeletons(self):
+        from repro.core import workloads as W
+        g = W.get_workload("resnet18")
+        sk = S.pipeline_skeleton(g, [0, 1], mesh_2d(6, 6), S.SIM_CONFIG)
+        with pytest.raises(TypeError):
+            S.derive_phase_model(sk, S.finish_pipeline(sk), proxy_seq=64)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (TenantServer micro-sim)
+# ---------------------------------------------------------------------------
+
+def _flat_phase(prefill=10_000.0, step_cycles=5e5, freq=500e6):
+    """A simple constant-rate phase model for unit tests."""
+    return S.PhaseModel(prefill_tokens_per_s=prefill,
+                        step_base_cycles=step_cycles,
+                        hbm_bytes_per_cycle=1e18,    # KV i/o negligible
+                        stall_cycles_per_range=0,
+                        freq_hz=freq)
+
+
+class TestTenantServer:
+    def _server(self, stream, profile_name="qwen2_0_5b", admit=0.0,
+                arrival=0.0, depart=1e9):
+        prof = SERVE_PROFILES[profile_name]
+        return TenantServer(1, prof, stream, arrival, admit, depart)
+
+    def test_serves_to_completion_and_ttft_ordering(self):
+        from repro.serve.requests import RequestSpec
+        stream = [RequestSpec(rid=i, t_s=0.1 * i, prompt_tokens=100,
+                              max_new_tokens=10, cls="chat")
+                  for i in range(6)]
+        srv = self._server(stream)
+        srv.advance(0.0, 60.0, _flat_phase())
+        recs = sorted(srv.records, key=lambda r: r.rid)
+        assert len(recs) == 6 and all(r.completed for r in recs)
+        assert all(r.tokens_out == 10 for r in recs)
+        # first tokens come out in arrival order; TTFT ~ prefill time
+        firsts = [r.first_token_s for r in recs]
+        assert firsts == sorted(firsts)
+        assert all(r.ttft_s > 0 and math.isfinite(r.tpot_s) for r in recs)
+
+    def test_backlogged_requests_pay_admission_wait(self):
+        """Anchoring streams at tenant *arrival* makes queue latency
+        surface as TTFT for the backlog."""
+        from repro.serve.requests import RequestSpec
+        stream = [RequestSpec(rid=0, t_s=0.5, prompt_tokens=64,
+                              max_new_tokens=4, cls="chat")]
+        srv = self._server(stream, arrival=0.0, admit=5.0)
+        srv.advance(5.0, 20.0, _flat_phase())
+        (rec,) = srv.records
+        assert rec.completed
+        assert rec.ttft_s > 4.4          # waited ~4.5 s before admission
+
+    def test_kv_pressure_preempts_and_recovers(self):
+        """A tiny arena forces mid-decode OOM: the youngest slot is
+        preempted (free-and-recompute) and everything still completes."""
+        import dataclasses
+        from repro.serve.requests import RequestSpec
+        prof = dataclasses.replace(
+            SERVE_PROFILES["qwen2_0_5b"], kv_arena_bytes=4 << 20,
+            kv_block_bytes=1 << 20, max_batch=4)
+        stream = [RequestSpec(rid=i, t_s=0.0, prompt_tokens=60,
+                              max_new_tokens=60, cls="chat")
+                  for i in range(4)]
+        srv = TenantServer(1, prof, stream, 0.0, 0.0, 1e9)
+        srv.advance(0.0, 300.0, _flat_phase())
+        assert srv.kv.stats.grow_oom > 0
+        recs = sorted(srv.records, key=lambda r: r.rid)
+        assert len(recs) == 4 and all(r.completed for r in recs)
+        assert any(r.preempts > 0 for r in recs)
+        assert srv.kv.buddy.free_bytes() == srv.kv.buddy.total
+
+    def test_unserveable_request_dropped_not_livelocked(self):
+        """A request whose *total* context (prompt + all output tokens)
+        can never fit the arena must be dropped up front — admitting it
+        would cycle admit -> grow-OOM -> self-preempt forever."""
+        import dataclasses
+        from repro.serve.requests import RequestSpec
+        prof = dataclasses.replace(
+            SERVE_PROFILES["qwen2_0_5b"], kv_arena_bytes=2 << 20,
+            kv_block_bytes=1 << 20, max_batch=4)   # capacity ~170 tokens
+        stream = [
+            RequestSpec(rid=0, t_s=0.0, prompt_tokens=100,
+                        max_new_tokens=200, cls="doc"),   # total 300: never
+            RequestSpec(rid=1, t_s=0.0, prompt_tokens=50,
+                        max_new_tokens=50, cls="chat"),   # total 100: fits
+        ]
+        srv = TenantServer(1, prof, stream, 0.0, 0.0, 1e9)
+        srv.advance(0.0, 120.0, _flat_phase())
+        assert srv.n_dropped == 1
+        recs = {r.rid: r for r in srv.records}
+        assert not recs[0].completed and recs[0].first_token_s is None
+        assert recs[1].completed and recs[1].tokens_out == 50
+
+    def test_deterministic_replay(self):
+        prof = SERVE_PROFILES["transformer"]
+        stream = sample_requests(prof, 20.0, seed=5)
+        outs = []
+        for _ in range(2):
+            srv = TenantServer(1, prof, list(stream), 0.0, 0.0, 1e9)
+            t = 0.0
+            while t < 40.0:              # advance in irregular windows
+                srv.advance(t, t + 1.7, _flat_phase(prefill=50_000.0,
+                                                    step_cycles=2e5))
+                t += 1.7
+            outs.append([(r.rid, r.ttft_s, r.tpot_s, r.tokens_out)
+                         for r in sorted(srv.records, key=lambda r: r.rid)])
+        assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# elastic vNPU resize (Hypervisor.resize_vnpu): churn property test
+# ---------------------------------------------------------------------------
+
+def _check_hypervisor_invariants(hyp: Hypervisor) -> None:
+    """No core double-owned or leaked, engine free view exact, buddy arena
+    covered — the invariants grow/shrink churn must preserve."""
+    owned = set()
+    for v in hyp.vnpus.values():
+        cores = set(v.p_cores)
+        assert not (cores & owned), "core owned by two vNPUs"
+        owned |= cores
+        assert v.request.topology.num_nodes == len(cores)
+        assert set(v.assignment.values()) == cores
+        assert hyp.directory.get(v.vmid) is v.routing_table
+    expect_free = set(hyp.topo.node_attrs) - owned - hyp.quarantined
+    assert hyp.free_cores() == expect_free
+    assert set(hyp.engine.regions.free) == expect_free
+    hyp.buddy.check_invariants()
+
+
+def _request(n, memory=8 << 20):
+    return VNPURequest(topology=mesh_2d(*best_rect(n), base_id=10_000),
+                       memory_bytes=memory, require_connected=False)
+
+
+class TestResizeVNPU:
+    def test_grow_shrink_grow_preserves_memory_and_tables(self):
+        hyp = Hypervisor(mesh_2d(6, 6), hbm_bytes=1 << 32)
+        v = hyp.create_vnpu(_request(4, memory=32 << 20))
+        rtt_before = list(v.rtt.entries)
+        blocks_before = list(v.mem_blocks)
+        for target in (9, 4, 12, 6):
+            v = hyp.resize_vnpu(v.vmid,
+                                mesh_2d(*best_rect(target), base_id=10_000))
+            assert v.n_cores == target
+            assert v.rtt.entries == rtt_before       # memory untouched
+            assert v.mem_blocks == blocks_before
+            _check_hypervisor_invariants(hyp)
+        hyp.destroy_vnpu(v.vmid)
+        _check_hypervisor_invariants(hyp)
+        assert hyp.buddy.free_bytes() == hyp.buddy.total
+
+    def test_resize_is_transactional_on_failure(self):
+        hyp = Hypervisor(mesh_2d(4, 4), hbm_bytes=1 << 30)
+        v = hyp.create_vnpu(_request(6))
+        hyp.create_vnpu(_request(8))
+        with pytest.raises(AllocationError):
+            hyp.resize_vnpu(v.vmid, mesh_2d(4, 4, base_id=10_000))  # 16 > free
+        assert v.n_cores == 6
+        _check_hypervisor_invariants(hyp)
+
+    def test_resize_avoids_quarantined_cores(self):
+        hyp = Hypervisor(mesh_2d(4, 4), hbm_bytes=1 << 30)
+        v = hyp.create_vnpu(_request(4))
+        hyp.mark_failed([0, 1, 2])
+        v = hyp.resize_vnpu(v.vmid, mesh_2d(2, 4, base_id=10_000))
+        assert not (set(v.p_cores) & {0, 1, 2})
+        _check_hypervisor_invariants(hyp)
+
+    @staticmethod
+    def _churn(seed):
+        rng = random.Random(seed)
+        hyp = Hypervisor(mesh_2d(6, 6), hbm_bytes=1 << 32)
+        live = []
+        for _ in range(30):
+            op = rng.choice(["create", "create", "resize", "resize",
+                             "resize", "destroy", "fail"])
+            try:
+                if op == "create" or not live:
+                    v = hyp.create_vnpu(_request(rng.choice([2, 4, 6, 9]),
+                                                 memory=rng.choice(
+                                                     [0, 8 << 20, 32 << 20])))
+                    live.append(v.vmid)
+                elif op == "resize":
+                    vmid = rng.choice(live)
+                    hyp.resize_vnpu(vmid, mesh_2d(
+                        *best_rect(rng.choice([2, 4, 6, 9, 12])),
+                        base_id=10_000))
+                elif op == "destroy":
+                    vmid = live.pop(rng.randrange(len(live)))
+                    hyp.destroy_vnpu(vmid)
+                elif op == "fail" and len(hyp.quarantined) < 4:
+                    hyp.mark_failed([rng.randrange(36)])
+            except AllocationError:
+                pass                      # full mesh is a legal outcome
+            _check_hypervisor_invariants(hyp)
+        for vmid in live:
+            hyp.destroy_vnpu(vmid)
+        _check_hypervisor_invariants(hyp)
+        assert hyp.buddy.free_bytes() == hyp.buddy.total
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_churn_property(self, seed):
+        self._churn(seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+    def test_churn_seeded(self, seed):
+        # deterministic variant that runs even without hypothesis
+        self._churn(seed)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration (plane + RESIZE events + SLA admission)
+# ---------------------------------------------------------------------------
+
+def _serving_run(policy_name, horizon=60.0, mesh=(8, 8), admission="sla",
+                 **pol_kw):
+    trace = make_trace("serving", horizon_s=horizon)
+    policy = make_policy(policy_name, mesh_2d(*mesh), **pol_kw)
+    sched = ClusterScheduler(policy, serving=ServingConfig(),
+                             admission=admission)
+    return sched, sched.run(trace, trace_name="serving")
+
+
+class TestServingScheduler:
+    def test_vnpu_end_to_end(self):
+        sched, m = _serving_run("vnpu", mapper="bipartite")
+        assert m.requests_arrived > 500
+        assert m.requests_completed > 0.7 * m.requests_arrived
+        assert m.requests_sla_good > 0
+        assert len(m.request_log) == m.requests_arrived
+        assert m.tokens_generated > 0
+        # the pressure controller fired and the hypervisor resized live
+        # tenants (the serving trace is tuned to overload transiently)
+        assert m.n_resize_attempts > 0
+        assert m.n_resizes > 0 and m.n_grows > 0
+        assert m.n_resizes == m.n_grows + m.n_shrinks
+        # ledger occupancancy stayed exact through resize churn
+        sched.ledger.check_invariants()
+        s = m.summary()
+        assert "serving" in s and s["serving"]["requests"] > 0
+
+    def test_request_level_determinism(self):
+        _, a = _serving_run("vnpu", horizon=45.0, mapper="bipartite")
+        _, b = _serving_run("vnpu", horizon=45.0, mapper="bipartite")
+        assert a.request_log == b.request_log
+        assert a.n_resizes == b.n_resizes
+        assert a.serving_summary() == b.serving_summary()
+
+    @pytest.mark.parametrize("policy", ["mig", "uvm"])
+    def test_baselines_run_clean(self, policy):
+        _, m = _serving_run(policy, horizon=40.0)
+        assert m.requests_arrived > 0
+        assert m.requests_completed > 0
+        if policy == "mig":
+            assert m.n_resizes == 0       # partitions cannot resize
+
+    def test_uvm_resize_grows_and_shrinks(self):
+        topo = mesh_2d(4, 4)
+        pol = make_policy("uvm", topo)
+        spec = TenantSpec(tid=1, model="qwen2_0_5b", n_cores=4,
+                          arrival_s=0.0, duration_s=10.0)
+        p = pol.allocate(spec)
+        p2, ok = pol.resize(p, 8)
+        assert ok and len(p2.cores) == 8
+        p3, ok = pol.resize(p2, 3)
+        assert ok and len(p3.cores) == 3
+        assert len(pol.free_cores()) == 13
+
+    def test_serving_off_keeps_legacy_metrics(self):
+        trace = make_trace("mixed", seed=3, horizon_s=20.0)
+        sched = ClusterScheduler(make_policy("vnpu", mesh_2d(6, 6)))
+        m = sched.run(trace, trace_name="mixed")
+        assert m.requests_arrived == 0 and not m.request_log
+        assert "serving" not in m.summary()
+
+    def test_sla_admission_orders_by_deadline(self):
+        sched = ClusterScheduler(make_policy("vnpu", mesh_2d(6, 6)),
+                                 serving=ServingConfig(), admission="sla")
+        tight = TenantSpec(tid=1, model="qwen2_0_5b", n_cores=4,
+                           arrival_s=0.0, duration_s=10.0, sla_wait_s=5.0)
+        slack = TenantSpec(tid=2, model="qwen2_0_5b", n_cores=4,
+                           arrival_s=0.0, duration_s=10.0, sla_wait_s=50.0)
+        sched._waiting = [(slack, 0.0), (tight, 0.0)]
+        order = [s.tid for s, _ in sched._admission_order()]
+        assert order == [1, 2]            # EDF: tight deadline first
+        sched.admission = "fifo"
+        assert [s.tid for s, _ in sched._admission_order()] == [2, 1]
+
+
+# ---------------------------------------------------------------------------
+# cross-check: analytic decode rate vs a real ServeEngine run (ROADMAP)
+# ---------------------------------------------------------------------------
+
+class TestServeEngineCrossCheck:
+    # Analytic decode tokens/s (full qwen2_0_5b on the SIM NPU config)
+    # divided by the measured CPU-backend tokens/s of the smoke-reduced
+    # model in the reference container.  The NPU model and the reduced CPU
+    # run differ by architecture, size and backend, so the ratio is a
+    # *calibration constant*, not 1.0; the test pins that the two stay
+    # within a band of it (CI machines vary in CPU speed, hence the wide
+    # tolerance — what matters is that the analytic model cannot silently
+    # drift by orders of magnitude).
+    CALIBRATION = 0.41
+    TOLERANCE = 8.0
+
+    def test_analytic_decode_rate_matches_engine(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.configs.base import reduce_for_smoke
+        from repro.models import build
+        from repro.serve import EngineConfig, ServeEngine
+
+        cfg = reduce_for_smoke(get_config("qwen2_0_5b"))
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(bundle, params,
+                          EngineConfig(batch_size=4, max_seq=64))
+        rng = np.random.default_rng(0)
+
+        def submit(n_new):
+            for _ in range(4):
+                eng.submit(rng.integers(0, cfg.vocab_size - 1, size=16
+                                        ).astype(np.int32),
+                           max_new_tokens=n_new)
+
+        submit(4)
+        eng.run()                          # warm-up: compile prefill+decode
+        submit(24)
+        tokens0 = eng.stats["tokens_out"]
+        import time
+        t0 = time.perf_counter()
+        eng.run(max_ticks=64)
+        dt = time.perf_counter() - t0
+        measured = (eng.stats["tokens_out"] - tokens0) / dt
+        assert measured > 0
+
+        # analytic: the same model served on 4 cores of the SIM config,
+        # single tenant, mid-decode batch of 4 at ~300 tokens context
+        from repro.sched.traces import get_serving_workload
+        prof = get_profile("qwen2_0_5b")
+        g = get_serving_workload("qwen2_0_5b")
+        sk = S.tensor_skeleton(g, [0, 1, 6, 7], mesh_2d(6, 6), S.SIM_CONFIG)
+        pm = S.derive_phase_model(sk, S.finish_tensor(sk),
+                                  proxy_seq=prof.proxy_seq)
+        step = pm.decode_step_s(4 * 300 * prof.kv_bytes_per_token, 4 * 3)
+        analytic = 4 / step
+
+        ratio = analytic / measured
+        assert self.CALIBRATION / self.TOLERANCE < ratio \
+            < self.CALIBRATION * self.TOLERANCE, (
+                f"analytic {analytic:.0f} tok/s vs measured "
+                f"{measured:.0f} tok/s: ratio {ratio:.3f} left the "
+                f"calibration band")
