@@ -27,6 +27,21 @@ produce bit-identical request-level trajectories, (b) vNPU >= MIG and
 >= UVM on SLA-goodput, (c) elastic resize demonstrably fired
 (vNPU resize count > 0), and (d) the event loop stays inside the
 ms/event budget.
+
+Scale gate (the million-request run, also merged into BENCH):
+    PYTHONPATH=src python benchmarks/serving_sim.py --scale-gate
+first pins the vectorized plane bit-identical to the retained scalar
+engine on the 8x8 ``serving`` trace (request log, samples and resize
+trajectory — for the default stream and for the diurnal/doc-heavy one),
+then replays the ``pod-serving`` trace on a 32x32 pod with scaled
+request streams (``--engine vector --no-request-log``) and fails unless
+>= 1M requests arrive inside the wall-time budget.
+
+Exploratory flags: ``--engine scalar`` replays through the segment-exact
+scalar plane, ``--arrival diurnal|flash`` / ``--mix doc_heavy`` /
+``--rate-scale`` reshape the per-tenant request streams, and
+``--no-request-log`` streams percentiles through the P^2 sketches
+instead of materializing per-request records.
 """
 from __future__ import annotations
 
@@ -43,10 +58,19 @@ from cluster_sim import BENCH_PATH, _write_bench          # noqa: E402
 from repro.core import mesh_2d                            # noqa: E402
 from repro.sched import (ClusterScheduler, ServingConfig,  # noqa: E402
                          TRACES, make_policy, make_trace)
+from repro.serve.plane import ServingPlane                # noqa: E402
+from repro.serve.requests import (ArrivalProcess,         # noqa: E402
+                                  REQUEST_MIXES)
 
 GATE_MESH = (8, 8)
 GATE_TRACE = "serving"
 GATE_MS_PER_EVENT = 60.0    # absolute event-loop budget (measured ~3 ms)
+
+SCALE_MESH = (32, 32)
+SCALE_TRACE = "pod-serving"
+SCALE_RATE = 6.0            # per-tenant request-stream multiplier
+SCALE_MIN_REQUESTS = 1_000_000
+SCALE_WALL_BUDGET_S = 600.0
 
 # serving-realistic baseline configs (see module docstring)
 POLICY_KWARGS = {
@@ -57,15 +81,21 @@ POLICY_KWARGS = {
 
 
 def run_policy(policy_name, trace, mesh, *, trace_name=GATE_TRACE,
-               admission="sla", seed=0, epoch_s=2.0):
+               admission="sla", seed=0, epoch_s=2.0, engine="vector",
+               record_requests=True, arrival=None, mix="default",
+               rate_scale=1.0):
     """One serving run: fresh policy + scheduler + plane."""
     kwargs = dict(POLICY_KWARGS.get(policy_name, {}))
     if policy_name == "mig" and mesh != tuple(GATE_MESH):
         kwargs.pop("partition_shapes", None)   # quadrant default elsewhere
     policy = make_policy(policy_name, mesh_2d(*mesh), **kwargs)
-    sched = ClusterScheduler(policy, epoch_s=epoch_s,
-                             serving=ServingConfig(seed=seed),
-                             admission=admission)
+    sched = ClusterScheduler(
+        policy, epoch_s=epoch_s,
+        serving=ServingConfig(seed=seed, engine=engine,
+                              record_requests=record_requests,
+                              arrival=arrival, request_mix=mix,
+                              rate_scale=rate_scale),
+        admission=admission)
     t0 = time.perf_counter()
     metrics = sched.run(trace, trace_name=trace_name)
     return metrics, time.perf_counter() - t0
@@ -183,6 +213,92 @@ def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
     return 0 if report["gate_ok"] else 1
 
 
+def _identity_pair(arrival, mix):
+    """Vector vs scalar engine over the 8x8 serving trace: bit-identical
+    request trajectories AND identical streamed summaries?"""
+    trace = make_trace(GATE_TRACE)
+    runs = {}
+    for engine in ServingPlane.ENGINES:
+        m, _ = run_policy("vnpu", trace, GATE_MESH, engine=engine,
+                          arrival=arrival, mix=mix)
+        runs[engine] = m
+    vec, sca = runs["vector"], runs["scalar"]
+    return (_request_trajectory(vec) == _request_trajectory(sca)
+            and vec.serving_summary() == sca.serving_summary())
+
+
+def run_scale_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
+    """The million-request scale gate (see module docstring): pin the
+    vectorized plane bit-identical to the scalar engine on the 8x8 gate
+    trace, then push >= 1M requests through a 32x32 pod inside the
+    wall-time budget, streaming percentiles instead of request records."""
+    identity = {
+        "default": _identity_pair(None, "default"),
+        "diurnal_doc_heavy": _identity_pair(
+            ArrivalProcess(kind="diurnal"), "doc_heavy"),
+    }
+    identity_ok = all(identity.values())
+
+    trace = make_trace(SCALE_TRACE)
+    metrics, wall = run_policy(
+        "vnpu", trace, SCALE_MESH, trace_name=SCALE_TRACE,
+        engine="vector", record_requests=False, rate_scale=SCALE_RATE)
+    s = metrics.serving_summary()
+    volume_ok = s["requests"] >= SCALE_MIN_REQUESTS
+    wall_ok = wall <= SCALE_WALL_BUDGET_S
+
+    row = {
+        "trace": SCALE_TRACE,
+        "mesh": "32x32-pod-serving",     # namespaced: the cluster pod
+                                         # gate owns the plain "32x32" rows
+        "mode": "serving-scale-vnpu",
+        "wall_s": round(wall, 2),
+        "events": metrics.n_events,
+        "requests": s["requests"],
+        "req_per_s": round(s["requests"] / max(wall, 1e-9), 1),
+        "completed": s["completed"],
+        "sla_goodput_rps": s["sla_goodput_rps"],
+        "ttft_p50_s": s["ttft_p50_s"],
+        "ttft_p99_s": s["ttft_p99_s"],
+        "tpot_p50_s": s["tpot_p50_s"],
+        "tpot_p99_s": s["tpot_p99_s"],
+        "resizes": s["resizes"],
+        "kv_preemptions": s["kv_preemptions"],
+        "peak_live_records": metrics.peak_live_records,
+    }
+    report = {
+        "mesh": list(SCALE_MESH),
+        "trace": SCALE_TRACE,
+        "tenants": len(trace),
+        "rate_scale": SCALE_RATE,
+        "scalar_vector_identity": identity,
+        "requests": s["requests"],
+        "min_requests": SCALE_MIN_REQUESTS,
+        "wall_s": round(wall, 2),
+        "wall_budget_s": SCALE_WALL_BUDGET_S,
+        "req_per_s": row["req_per_s"],
+        "peak_live_records": metrics.peak_live_records,
+        "summary": s,
+        "gate_ok": identity_ok and volume_ok and wall_ok,
+    }
+    _write_bench("serving_scale", report, [row], bench_out)
+    if json_out:
+        print(json.dumps(report, indent=2))
+    else:
+        print(f"identity={'OK' if identity_ok else 'DIVERGED'} "
+              f"{identity} "
+              f"requests={s['requests']} (>= {SCALE_MIN_REQUESTS}: "
+              f"{'OK' if volume_ok else 'FAIL'}) "
+              f"wall={wall:.1f}s (<= {SCALE_WALL_BUDGET_S:.0f}s: "
+              f"{'OK' if wall_ok else 'FAIL'}) "
+              f"{row['req_per_s']:.0f} req/s "
+              f"ttft_p99={s['ttft_p99_s']:.3f}s "
+              f"tpot_p99={s['tpot_p99_s']:.4f}s "
+              f"goodput={s['sla_goodput_rps']:.2f} rps -> "
+              f"{'OK' if report['gate_ok'] else 'FAIL'}")
+    return 0 if report["gate_ok"] else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--trace", default="serving",
@@ -197,10 +313,31 @@ def main(argv=None) -> int:
     ap.add_argument("--admission", default="sla", choices=("fifo", "sla"),
                     help="queue drain order: FIFO or SLA-aware "
                          "(EDF with TTFT-predictive deadlines)")
+    ap.add_argument("--engine", default="vector",
+                    choices=ServingPlane.ENGINES,
+                    help="serving-plane engine: vectorized lockstep or "
+                         "the segment-exact scalar reference")
+    ap.add_argument("--no-request-log", action="store_true",
+                    help="stream percentiles (P^2 sketches) instead of "
+                         "materializing per-request records")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=ArrivalProcess.KINDS,
+                    help="request-arrival shape within each tenant stream")
+    ap.add_argument("--mix", default="default",
+                    choices=sorted(REQUEST_MIXES),
+                    help="request mix: profile default or the heavy-tail "
+                         "doc_heavy (Pareto long-prefill) mix")
+    ap.add_argument("--rate-scale", type=float, default=1.0,
+                    help="multiplier on every tenant's request rate")
     ap.add_argument("--gate", action="store_true",
                     help="CI mode: deterministic request trajectories, "
                          "vNPU >= MIG/UVM on SLA-goodput, resize fires, "
                          "ms/event budget; merges BENCH_cluster_sim.json")
+    ap.add_argument("--scale-gate", action="store_true",
+                    help="CI mode: scalar-vs-vector bit-identity on the "
+                         "8x8 gate trace, then >= 1M requests on a 32x32 "
+                         "pod inside the wall budget; merges "
+                         "BENCH_cluster_sim.json")
     ap.add_argument("--bench-out", default=str(BENCH_PATH),
                     help="where --gate merges the machine-readable "
                          "BENCH record")
@@ -209,6 +346,8 @@ def main(argv=None) -> int:
 
     if args.gate:
         return run_gate(args.json, args.bench_out)
+    if args.scale_gate:
+        return run_scale_gate(args.json, args.bench_out)
 
     try:
         rows_cols = tuple(int(x) for x in args.mesh.split(","))
@@ -221,12 +360,18 @@ def main(argv=None) -> int:
     except KeyError as e:
         ap.error(str(e))
 
+    arrival = (None if args.arrival == "poisson"
+               else ArrivalProcess(kind=args.arrival))
     rows = []
     for name in [p.strip() for p in args.policy.split(",") if p.strip()]:
         metrics, wall = run_policy(name, trace, rows_cols,
                                    trace_name=args.trace,
                                    admission=args.admission,
-                                   seed=args.seed or 0)
+                                   seed=args.seed or 0,
+                                   engine=args.engine,
+                                   record_requests=not args.no_request_log,
+                                   arrival=arrival, mix=args.mix,
+                                   rate_scale=args.rate_scale)
         rows.append(_policy_row(metrics, wall))
     if args.json:
         print(json.dumps({"trace": args.trace, "mesh": list(rows_cols),

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, FrozenSet, Hashable, Optional, Sequence, Tuple
+from typing import (AbstractSet, Callable, Dict, FrozenSet, Hashable,
+                    Optional, Sequence, Tuple)
 
 from ..mapping import MappingResult
 
@@ -64,11 +65,38 @@ def decode_result(entry: CachedMapping, region_order: Sequence[int],
         candidates_evaluated=entry.candidates_evaluated)
 
 
-class TEDCache:
-    """Bounded LRU over canonical mapping results."""
+def region_part(key: Tuple) -> Hashable:
+    """The free-region component of a cache key.  Normal keys lead with
+    the region's canonical ``RegionSignature.key``; the relaxed zig-zag
+    keys lead with the ``"zz"`` tag and carry the sorted free set second
+    (see ``MappingEngine.map_request`` / ``_relaxed_fallback``)."""
+    return key[1] if key[0] == "zz" else key[0]
 
-    def __init__(self, max_entries: int = 4096):
+
+class TEDCache:
+    """Bounded LRU over canonical mapping results, with live-shape pinning.
+
+    Plain LRU makes placement results *history-dependent* at scale: once
+    churn evicts the entry for a region shape that is still instantiated
+    on the mesh, the next query re-solves on concrete core ids, and a
+    re-solve is only guaranteed to reproduce the evicted entry up to
+    equal-cost ties (heuristic tie-breaks are translation-covariant but
+    the D4 frame-exact protocol exists precisely because they are not
+    orientation-invariant).  ``pinned`` closes that hole: a callback
+    returning the region keys currently *live* on the mesh — eviction
+    gives their entries a second chance (re-appended, never dropped), so
+    for live shapes the hit/miss pattern is a function of the query
+    sequence alone, not of how much unrelated churn the cache absorbed.
+    Dead shapes become evictable the moment the tracker mutates them
+    away; if every resident entry is pinned the capacity bound goes soft
+    (the pin set is O(live components), so the overshoot is too).
+    """
+
+    def __init__(self, max_entries: int = 4096,
+                 pinned: Optional[Callable[[], AbstractSet]] = None):
         self.max_entries = max_entries
+        self._pinned = pinned
+        self.evictions = 0
         self._data: "OrderedDict[Hashable, Optional[CachedMapping]]" = \
             OrderedDict()
 
@@ -83,8 +111,20 @@ class TEDCache:
     def put(self, key: Hashable, entry: Optional[CachedMapping]) -> None:
         self._data[key] = entry
         self._data.move_to_end(key)
-        while len(self._data) > self.max_entries:
-            self._data.popitem(last=False)
+        if len(self._data) <= self.max_entries:
+            return
+        live: Optional[AbstractSet] = None
+        scanned, n = 0, len(self._data)
+        while len(self._data) > self.max_entries and scanned < n:
+            k, v = self._data.popitem(last=False)
+            scanned += 1
+            if live is None:    # snapshot once per overflowing put
+                live = (frozenset(self._pinned())
+                        if self._pinned is not None else frozenset())
+            if region_part(k) in live:
+                self._data[k] = v        # second chance: stays resident
+            else:
+                self.evictions += 1
 
     def clear(self) -> None:
         self._data.clear()

@@ -85,7 +85,7 @@ class MappingEngine:
         self.pool = batch.make_pool_arrays(topo)
         self.symmetry = symmetry
         self.regions = FreeRegions(topo, adj=self.adj, symmetry=symmetry)
-        self.cache = TEDCache(cache_entries)
+        self.cache = TEDCache(cache_entries, pinned=self._live_region_keys)
         self.stats = EngineStats()
         self.mappers: Dict[str, Mapper] = make_mappers()
         if mapper not in self.mappers:
@@ -288,10 +288,23 @@ class MappingEngine:
             "exact_escalations": s.exact_escalations,
             "candidates_evaluated": s.candidates_evaluated,
             "cache_entries": len(self.cache),
+            "cache_evictions": self.cache.evictions,
             "region_ops": self.regions.ops,
         }
 
     # -- internals -----------------------------------------------------------
+    def _live_region_keys(self) -> FrozenSet:
+        """Canonical keys of the free-set shapes currently instantiated on
+        the mesh (every tracked component, plus the whole free set that
+        addresses the relaxed zig-zag memo) — the entries
+        :class:`TEDCache` eviction must not drop, so that a live shape's
+        hit/miss pattern is independent of unrelated churn (see the
+        cache's docstring for the determinism argument)."""
+        keys = {self.regions.signature(cid).key
+                for cid, _ in self.regions.components()}
+        keys.add(tuple(sorted(self.regions.free)))
+        return frozenset(keys)
+
     @staticmethod
     def _better(candidate: MappingResult,
                 incumbent: Optional[MappingResult]) -> bool:

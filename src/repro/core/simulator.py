@@ -880,13 +880,34 @@ def weights_resident(weight_bytes: int, physical_tiles: int,
 def derive_phase_model(sk: TensorSkeleton, report: RunReport, *,
                        proxy_seq: int,
                        decode_hbm_clients: int = 1,
+                       hbm_share: Optional[float] = None,
                        isolated_interval: Optional[int] = None) -> PhaseModel:
     """Build the serving :class:`PhaseModel` from one tenant's skeleton and
     its current (contention-aware) report.  O(reduced layers).
 
-    ``decode_hbm_clients`` is the number of residents streaming from HBM
-    during decode (all actively-serving LLM tenants share the port);
-    the NoC contention ratio is ``report.interval / isolated interval`` —
+    The decode HBM port is shared across actively-streaming residents.
+    ``hbm_share`` is this tenant's fraction of the port bandwidth — the
+    scheduler weights it by each resident's actual decode traffic
+    (streamed weight bytes + KV arena bytes), which is how a saturated
+    FR-FCFS memory controller actually divides service: a 7B shard set
+    issues proportionally more requests than an embedding-sized
+    co-resident and gets proportionally more bandwidth (the legacy
+    equal-split census throttled it as if both drew the same).  The
+    weighted share is charged to the sustained decode streams (weight
+    shards and batch KV reads); the UVM activation bounce — short,
+    latency-bound synchronization round-trips that cannot batch into
+    long row hits — stays at the equal-split ``1/decode_hbm_clients``
+    service a fair controller gives short transfers.  The scheduler
+    passes a *conserving* share (a convex blend of the equal split and
+    the pure demand fraction — ``sched.cluster.HBM_BYTE_WEIGHT``):
+    shares sum to one over the busy clients, so byte-weighting
+    redistributes port bandwidth toward heavy streamers instead of
+    minting extra service, and a small co-resident keeps a guaranteed
+    round-robin slot rather than starving behind a 7B shard stream.
+    ``decode_hbm_clients`` is the legacy equal-split (share = 1/clients
+    applied to every term) when ``hbm_share`` is None.
+
+    The NoC contention ratio is ``report.interval / isolated interval`` —
     both recombinations of the same cached skeleton, so the ratio is
     exactly the slowdown the ledger's aggregated co-tenant loads induce.
     ``isolated_interval`` is that denominator; it is a pure function of
@@ -900,7 +921,12 @@ def derive_phase_model(sk: TensorSkeleton, report: RunReport, *,
     physical = sk.tdm_physical if (sk.tdm_physical and sk.tdm_physical < n) \
         else n
     slices = -(-n // physical)
-    bw = hw.hbm_bytes_per_cycle / max(decode_hbm_clients, 1)
+    eq_bw = hw.hbm_bytes_per_cycle / max(decode_hbm_clients, 1)
+    if hbm_share is not None:
+        bw = hw.hbm_bytes_per_cycle * min(max(hbm_share, 1e-9), 1.0)
+    else:
+        bw = eq_bw
+    kv_bw = bw
 
     resident = weights_resident(graph.total_weight_bytes, physical, hw)
     # weights stream once per step whatever the slicing (each TDM slice
@@ -916,7 +942,8 @@ def derive_phase_model(sk: TensorSkeleton, report: RunReport, *,
         tok_bytes = out_bytes / max(proxy_seq, 1)   # one token's activation
         if sk.comm == "uvm":
             # bounce through global memory: n writes + n reads + barrier
-            comm += 2 * tok_bytes * n / bw + hw.uvm_sync_cycles
+            # (fair-share service — too short to batch into row hits)
+            comm += 2 * tok_bytes * n / eq_bw + hw.uvm_sync_cycles
         else:
             vol = 2 * tok_bytes * (n - 1) / max(n, 1)
             comm += (vol / hw.noc_link_bytes_per_cycle * hops * contention
@@ -930,7 +957,7 @@ def derive_phase_model(sk: TensorSkeleton, report: RunReport, *,
     return PhaseModel(
         prefill_tokens_per_s=max(report.fps * proxy_seq, 1e-9),
         step_base_cycles=base,
-        hbm_bytes_per_cycle=bw,
+        hbm_bytes_per_cycle=kv_bw,
         stall_cycles_per_range=hw.rtt_entry_read_cycles,
         freq_hz=hw.freq_hz,
         slices=slices,

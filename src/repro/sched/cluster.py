@@ -52,7 +52,8 @@ from ..core.baselines import AllocationError
 from ..core.simulator import Flow, HWConfig, PhaseModel, RunReport
 from ..core.workloads import WorkloadGraph
 from ..serve.plane import ServingPlane
-from ..serve.requests import get_profile
+from ..serve.requests import ArrivalProcess, get_profile
+from ..serve.stats import LatencyStats
 from .events import (ARRIVAL, DEPARTURE, EPOCH, FAILURE, RESIZE, EventQueue,
                      TenantSpec)
 from .ledger import InterferenceLedger
@@ -61,6 +62,13 @@ from .traces import get_serving_workload
 
 RESCORE_MODES = ("ledger", "oracle")
 ADMISSION_MODES = ("fifo", "sla")
+
+# Byte-weighting strength of the decode HBM-share blend (see
+# ``_hbm_share_keys``): a busy client's port share is
+# ``(1-w)/streamers + w*own_bytes/total_bytes``.  w=0 is the legacy
+# equal split; w=1 is pure demand-proportional service (which starves
+# small co-residents behind a 7B shard stream).
+HBM_BYTE_WEIGHT = 0.25
 
 
 @dataclasses.dataclass
@@ -78,6 +86,15 @@ class ServingConfig:
     directions respect a per-tenant ``cooldown_s`` hysteresis and the
     ``grow_limit`` cap (a multiple of the original core ask); shrink never
     goes below the original ask.
+
+    ``engine`` selects the serving-plane implementation (``"vector"``, the
+    numpy struct-of-arrays pool, or ``"scalar"``, the per-tenant reference
+    loop — bit-identical trajectories, pinned by the scale gate).
+    ``record_requests=False`` streams completions through the metrics
+    sketches instead of materializing per-request records (mandatory at
+    million-request scale; ``request_log`` stays empty).  ``arrival`` /
+    ``rate_scale`` / ``request_mix`` shape every tenant's request stream
+    (see :mod:`repro.serve.requests`).
     """
     seed: int = 0
     grow_queue_depth: int = 3
@@ -86,6 +103,11 @@ class ServingConfig:
     shrink_epochs: int = 3
     cooldown_s: float = 6.0
     grow_limit: float = 3.0
+    engine: str = "vector"
+    record_requests: bool = True
+    arrival: Optional[ArrivalProcess] = None
+    rate_scale: float = 1.0
+    request_mix: str = "default"
 
 
 @dataclasses.dataclass
@@ -176,10 +198,17 @@ class ClusterMetrics:
     kv_preemptions: int = 0           # mid-decode KV OOM evictions
     kv_admit_oom: int = 0             # admissions deferred on KV pressure
     requests_dropped: int = 0         # prompts larger than the whole arena
-    ttft_s: List[float] = dataclasses.field(default_factory=list)
-    tpot_s: List[float] = dataclasses.field(default_factory=list)
+    # high-water mark of per-request records resident in the plane at any
+    # instant (the memory-audit telemetry: O(active tenants x backlog)
+    # with record_requests off, never O(total requests))
+    peak_live_records: int = 0
+    # streaming latency summaries: exact counters + P² percentile sketches
+    # fed one completion at a time (O(1) memory at any request volume)
+    ttft_stats: LatencyStats = dataclasses.field(default_factory=LatencyStats)
+    tpot_stats: LatencyStats = dataclasses.field(default_factory=LatencyStats)
     # compact per-request trajectory for determinism gates:
     # (tid, rid, ttft, tpot, tokens_out, preempts), completed-or-censored
+    # — only populated when ServingConfig.record_requests is on
     request_log: List[Tuple] = dataclasses.field(default_factory=list)
 
     @property
@@ -220,11 +249,17 @@ class ClusterMetrics:
         return self.requests_sla_good / self.horizon_s if self.horizon_s \
             else 0.0
 
-    def _latency_pct(self, xs: List[float], q: float) -> float:
-        finite = [x for x in xs if math.isfinite(x)]
-        if not finite:
-            return 0.0
-        return float(np.percentile(np.array(finite), q))
+    def observe_request(self, ttft_s: float, tpot_s: float, tokens: int,
+                        good: bool) -> None:
+        """Streaming completion sink: the serving plane calls this the
+        moment a request finishes (identical order for both engines), so
+        completed-request accounting never needs the per-request records."""
+        self.requests_completed += 1
+        self.tokens_generated += tokens
+        if good:
+            self.requests_sla_good += 1
+        self.ttft_stats.add(ttft_s)
+        self.tpot_stats.add(tpot_s)
 
     def serving_summary(self) -> Dict[str, float]:
         """Flat digest of the request-level serving run."""
@@ -234,10 +269,12 @@ class ClusterMetrics:
             "sla_good": self.requests_sla_good,
             "sla_goodput_rps": round(self.sla_goodput_rps, 4),
             "tokens_generated": self.tokens_generated,
-            "ttft_p50_s": round(self._latency_pct(self.ttft_s, 50), 4),
-            "ttft_p95_s": round(self._latency_pct(self.ttft_s, 95), 4),
-            "tpot_p50_s": round(self._latency_pct(self.tpot_s, 50), 5),
-            "tpot_p95_s": round(self._latency_pct(self.tpot_s, 95), 5),
+            "ttft_p50_s": round(self.ttft_stats.percentile(50), 4),
+            "ttft_p95_s": round(self.ttft_stats.percentile(95), 4),
+            "ttft_p99_s": round(self.ttft_stats.percentile(99), 4),
+            "tpot_p50_s": round(self.tpot_stats.percentile(50), 5),
+            "tpot_p95_s": round(self.tpot_stats.percentile(95), 5),
+            "tpot_p99_s": round(self.tpot_stats.percentile(99), 5),
             "kv_preemptions": self.kv_preemptions,
             "kv_admit_oom": self.kv_admit_oom,
             "requests_dropped": self.requests_dropped,
@@ -326,12 +363,17 @@ class ClusterScheduler:
         self.serving = serving
         self.admission = admission
         self.plane: Optional[ServingPlane] = (
-            ServingPlane(seed=serving.seed) if serving is not None else None)
+            ServingPlane(seed=serving.seed, engine=serving.engine,
+                         record_requests=serving.record_requests,
+                         arrival=serving.arrival,
+                         rate_scale=serving.rate_scale,
+                         mix=serving.request_mix)
+            if serving is not None else None)
         self._resize_state: Dict[int, _ResizeState] = {}
-        # tid -> {hbm-streamer count -> phase model}: the streamer count
-        # oscillates as servers go busy/idle, so keep one model per count
-        # instead of thrashing a single slot
-        self._phase_cache: Dict[int, Dict[int, PhaseModel]] = {}
+        # tid -> {(own bytes, total bytes) HBM-share key -> phase model}:
+        # the byte-weighted share oscillates as servers go busy/idle, so
+        # keep one model per share instead of thrashing a single slot
+        self._phase_cache: Dict[int, Dict[Tuple[int, int], PhaseModel]] = {}
         # tid -> isolated (no-external-load) interval of the cached
         # skeleton — pure function of the placement, invalidated with it
         self._iso_cache: Dict[int, int] = {}
@@ -565,36 +607,67 @@ class ClusterScheduler:
         return S.weights_resident(rt.graph.total_weight_bytes, physical,
                                   self.hw)
 
-    def _n_streamers(self) -> int:
-        """Residents streaming weights from HBM during decode: attached
-        tenants with work in flight whose shards don't fit in scratchpad.
-        Snapshotted once per integration window (order-independent); a
-        tenant grown past its weights-residency threshold stops streaming,
-        which speeds *everyone's* decode — the cluster-wide payoff of
-        elastic growth.  Weight traffic dominates KV traffic, so resident
-        tenants' KV reads are not counted as an extra client."""
-        n = 0
-        for tid, server in self.plane.servers.items():
-            rt = self._residents.get(tid)
-            if rt is None:
+    def _hbm_share_keys(self) -> Dict[int, Tuple[int, int, int]]:
+        """Byte-weighted decode HBM shares, snapshotted once per
+        integration window: each attached tenant's ``(own, total,
+        streamers)`` demand key, where demand is the bytes its decode step
+        actually streams (weight shards unless they fit in aggregate
+        scratchpad, plus its KV arena), ``total`` sums the demands of
+        every tenant with work in flight, and ``streamers`` counts the
+        busy weight-streaming tenants.  :meth:`_phase_model` turns the
+        key into a port share via the convex blend ``(1-w)/streamers +
+        w*own/total`` (``w = HBM_BYTE_WEIGHT``): a saturated FR-FCFS
+        controller arbitrates between per-client round-robin slots (the
+        equal-split term, which also guarantees a small client is never
+        starved by a giant co-resident) and row-hit-first service that
+        tracks offered load (the demand term: a 7B shard set earns
+        proportionally more of the port than an embedding-sized
+        co-resident).  Unlike a floored ``max(own/total, 1/streamers)``,
+        the blend *conserves* the port: shares sum to one over the busy
+        clients, so byte-weighting redistributes bandwidth instead of
+        minting it.  An idle tenant is keyed as if it joined the pool:
+        the rates it would see the moment work arrives.  A tenant grown
+        past its weights-residency threshold drops its weight bytes from
+        every total, which speeds *everyone's* decode — the cluster-wide
+        payoff of elastic growth."""
+        demands: Dict[int, Tuple[int, bool, bool]] = {}
+        busy_total = 0
+        n_streamers = 0
+        for tid, rt in self._residents.items():
+            if not self.plane.is_attached(tid):
                 continue
-            busy = (server.active or server.pending
-                    or server.prefill is not None)
-            if busy and not self._weights_resident(rt):
-                n += 1
-        return max(1, n)
+            streams = not self._weights_resident(rt)
+            d = self.plane.profile(tid).kv_arena_bytes
+            if streams:
+                d += rt.graph.total_weight_bytes
+            busy = self.plane.busy(tid)
+            demands[tid] = (d, busy, streams)
+            if busy:
+                busy_total += d
+                if streams:
+                    n_streamers += 1
+        out = {}
+        for tid, (d, busy, streams) in demands.items():
+            if busy:
+                total, nstr = busy_total, n_streamers
+            else:   # as if it joined the pool right now
+                total = busy_total + d
+                nstr = n_streamers + (1 if streams else 0)
+            out[tid] = (d, total, max(nstr, 1))
+        return out
 
     def _phase_model(self, rt: ResidentTenant,
-                     streamers: int) -> PhaseModel:
+                     share: Tuple[int, int, int]) -> PhaseModel:
         """The tenant's current phase-aware serving rates, derived from its
         cached placement skeleton and contention-aware epoch score (cached
-        per HBM-streamer count until the score or placement changes)."""
+        per byte-weighted HBM-share key until the score or placement
+        changes)."""
         tid = rt.spec.tid
         # scores first: a dirty pass clears/pops _phase_cache, so taking
         # the per-tid slot before it would store into an orphaned dict
         self._ensure_scores()
         per_tid = self._phase_cache.setdefault(tid, {})
-        pm = per_tid.get(streamers)
+        pm = per_tid.get(share)
         if pm is not None:
             return pm
         sk = self._skeleton(rt)
@@ -605,32 +678,37 @@ class ClusterScheduler:
         if iso is None:
             iso = S.finish_tensor(sk).interval_cycles
             self._iso_cache[tid] = iso
+        own, total, nstr = share
         pm = S.derive_phase_model(
             sk, report,
-            proxy_seq=self.plane.servers[tid].profile.proxy_seq,
-            decode_hbm_clients=streamers, isolated_interval=iso)
-        per_tid[streamers] = pm
+            proxy_seq=self.plane.profile(tid).proxy_seq,
+            hbm_share=((1.0 - HBM_BYTE_WEIGHT) / nstr
+                       + HBM_BYTE_WEIGHT * own / max(total, 1)),
+            decode_hbm_clients=nstr, isolated_interval=iso)
+        per_tid[share] = pm
         return pm
 
-    def _fold_records(self, model: str, server) -> None:
-        """Aggregate a departed tenant's request records into the metrics."""
-        profile = get_profile(model)
+    def _fold_records(self, fold) -> None:
+        """Aggregate a departed tenant's :class:`~repro.serve.plane.
+        ServerFold` into the metrics.  Completed requests were already
+        streamed through ``observe_request`` at finalize time; this books
+        the arrival census, censored decode tokens, KV telemetry and — in
+        record mode — the determinism gates' ``request_log``."""
         m = self.metrics
-        for rec in server.records:
-            m.requests_arrived += 1
-            m.requests_completed += rec.completed
-            m.tokens_generated += rec.tokens_out
-            if rec.sla_good(profile.ttft_slo_s, profile.tpot_slo_s):
-                m.requests_sla_good += 1
-            if rec.completed:
-                m.ttft_s.append(rec.ttft_s)
-                m.tpot_s.append(rec.tpot_s)
-            m.request_log.append(
-                (rec.tid, rec.rid, round(rec.ttft_s, 9),
-                 round(rec.tpot_s, 9), rec.tokens_out, rec.preempts))
-        m.kv_preemptions += server.kv.stats.grow_oom
-        m.kv_admit_oom += server.kv.stats.admit_oom
-        m.requests_dropped += server.n_dropped
+        if fold.records is not None:
+            for rec in fold.records:
+                m.requests_arrived += 1
+                if not rec.completed:
+                    m.tokens_generated += rec.tokens_out
+                m.request_log.append(
+                    (rec.tid, rec.rid, round(rec.ttft_s, 9),
+                     round(rec.tpot_s, 9), rec.tokens_out, rec.preempts))
+        else:
+            m.requests_arrived += fold.n_requests
+            m.tokens_generated += fold.censored_tokens
+        m.kv_preemptions += fold.kv_stats.grow_oom
+        m.kv_admit_oom += fold.kv_stats.admit_oom
+        m.requests_dropped += fold.n_dropped
 
     def _check_pressure(self, now: float, evq: EventQueue) -> None:
         """Epoch hook of the elastic-resize controller: read each serving
@@ -721,7 +799,8 @@ class ClusterScheduler:
         if dt <= 0:
             return
         self.metrics.util_integral += self.policy.utilization() * dt
-        streamers = self._n_streamers() if self.plane is not None else 1
+        shares = self._hbm_share_keys() if self.plane is not None else {}
+        entries = []
         for tid, rt in self._residents.items():
             active = dt
             if rt.pause_until_s > self._last_t:
@@ -731,8 +810,12 @@ class ClusterScheduler:
             if self.plane is not None and self.plane.is_attached(tid):
                 w0 = max(self._last_t, min(rt.pause_until_s, now))
                 if now > w0:
-                    self.plane.advance(tid, w0, now,
-                                       self._phase_model(rt, streamers))
+                    entries.append((tid, w0,
+                                    self._phase_model(rt, shares[tid])))
+        if entries:
+            # one batched call: the vector engine advances every tenant's
+            # window in a single struct-of-arrays lockstep loop
+            self.plane.advance_all(entries, now)
         self._last_t = now
 
     # -- admission ---------------------------------------------------------
@@ -755,7 +838,7 @@ class ClusterScheduler:
                 spec.tid, spec.model, spec.arrival_s, now, rt.depart_s):
             self._resize_state[spec.tid] = _ResizeState(
                 orig_n_cores=spec.n_cores)
-            self._phase_cache.clear()    # decode HBM-client count changed
+            self._phase_cache.clear()    # decode HBM-share totals changed
         evq.push(rt.depart_s, DEPARTURE, tid=spec.tid)
         self.metrics.n_admitted += 1
         self.metrics.queue_waits_s.append(now - spec.arrival_s)
@@ -914,6 +997,10 @@ class ClusterScheduler:
         self.metrics = ClusterMetrics(policy=self.policy.name,
                                       trace=trace_name,
                                       rescore_mode=self.rescore_mode)
+        if self.plane is not None:
+            # completions stream straight into the run's metrics the
+            # moment they finalize (exact counters + percentile sketches)
+            self.plane.sink = self.metrics.observe_request
         evq = EventQueue()
         for spec in trace:
             evq.push(spec.arrival_s, ARRIVAL, spec=spec)
@@ -960,8 +1047,7 @@ class ClusterScheduler:
                 if rt is not None:
                     if self.plane is not None and \
                             self.plane.is_attached(ev.tid):
-                        self._fold_records(rt.spec.model,
-                                           self.plane.detach(ev.tid))
+                        self._fold_records(self.plane.detach(ev.tid))
                         self._resize_state.pop(ev.tid, None)
                         self._phase_cache.clear()
                     self.policy.release(rt.placement)
@@ -999,6 +1085,8 @@ class ClusterScheduler:
                                    spec.sla_wait_s))
         self._waiting = []
         self.metrics.horizon_s = self._last_t
+        if self.plane is not None:
+            self.metrics.peak_live_records = self.plane.peak_live_records
         counters = getattr(self.policy, "engine_counters", None)
         if callable(counters):
             self.metrics.engine_counters = counters()

@@ -12,7 +12,9 @@ pod-matched arrival rates and 2–48-core asks for 16x16–32x32 meshes (the
 README table lists rates and intended ``--mesh`` sizes); ``serving`` is
 the LLM-only mix for the request-level serving plane (every tenant has a
 :mod:`repro.serve.requests` profile and a KV-arena memory grant; intended
-mesh 8x8).  All times are seconds; traces are deterministic per seed.
+mesh 8x8), with ``pod-serving`` the same mix scaled to a 32x32 pod for
+the million-request scale gate.  All times are seconds; traces are
+deterministic per seed.
 """
 from __future__ import annotations
 
@@ -255,6 +257,15 @@ TRACES: Dict[str, TraceConfig] = {
     "serving": TraceConfig(name="serving", catalog=SERVING_CATALOG,
                            rate_per_s=0.4, service_mean_s=35.0,
                            horizon_s=120.0, intended_mesh="8x8"),
+    # The million-request pod trace: the serving mix scaled to a 32x32
+    # pod (1024 cores) at the same ~140% core-demand overload as the 8x8
+    # gate (6.4/s x ~6.5 cores x 35 s ~= 1456 demanded).  With the
+    # request streams scaled up (ServingConfig.rate_scale, see
+    # benchmarks/serving_sim.py --scale-gate) this drives >1M requests
+    # through the vectorized plane inside the CI wall budget.
+    "pod-serving": TraceConfig(name="pod-serving", catalog=SERVING_CATALOG,
+                               rate_per_s=6.4, service_mean_s=35.0,
+                               horizon_s=300.0, intended_mesh="32x32"),
 }
 
 

@@ -24,6 +24,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, List, Optional
 
+import numpy as np
+
 from ..core.buddy import BuddyAllocator, OutOfMemory
 from ..core.vchunk import RangeTranslationTable, RTTEntry
 
@@ -80,6 +82,21 @@ class TenantKV:
         """Total RTT ranges the active batch re-walks per decode step —
         multiply by ``HWConfig.rtt_entry_read_cycles`` for the stall."""
         return sum(self.n_ranges(r) for r in rids)
+
+    def block_counts(self, rids: Iterable[int]) -> np.ndarray:
+        """Batched ``n_ranges`` — one arena query for a whole batch (the
+        vectorized plane refreshes its per-slot block mirror from this)."""
+        return np.fromiter((len(self._blocks.get(r, ())) for r in rids),
+                           dtype=np.int64)
+
+    def capacity_limit_tokens(self, rid: int) -> int:
+        """Largest token count the request's current blocks can hold
+        without another allocation: the exact inverse of
+        ``_blocks_for`` (``tokens <= n_blocks * block_bytes // bpt`` iff
+        ``try_grow`` would be an allocation-free no-op) — the vectorized
+        plane's O(1) precheck for skipping per-slot grow calls."""
+        return (len(self._blocks.get(rid, ())) * self.block_bytes
+                // self.kv_bytes_per_token)
 
     # -- lifecycle -----------------------------------------------------------
     def _alloc_blocks(self, rid: int, n: int) -> bool:

@@ -34,8 +34,11 @@ class RequestClass:
     """One request shape in a model's serving mix.
 
     Prompt lengths are lognormal (mean ``prompt_mean`` tokens, coefficient
-    of variation ``prompt_cv``) clipped to ``[8, prompt_max]``; output
-    lengths are exponential (mean ``out_mean``) clipped to ``[2, out_max]``.
+    of variation ``prompt_cv``) clipped to ``[8, prompt_max]`` — or, with
+    ``prompt_dist="pareto"``, Pareto-I heavy-tailed with shape
+    ``prompt_alpha`` and the same mean (the doc-heavy long-prefill mix);
+    output lengths are exponential (mean ``out_mean``) clipped to
+    ``[2, out_max]``.
     """
     name: str
     weight: float
@@ -44,6 +47,8 @@ class RequestClass:
     prompt_max: int
     out_mean: float
     out_max: int
+    prompt_dist: str = "lognormal"       # "lognormal" | "pareto"
+    prompt_alpha: float = 2.5            # Pareto shape (tail index)
 
 
 #: chat: short prompt, long generation — decode-dominant
@@ -52,6 +57,79 @@ _CHAT = RequestClass("chat", 0.65, prompt_mean=96.0, prompt_cv=0.6,
                      prompt_max=512, out_mean=96.0, out_max=256)
 _DOC = RequestClass("doc", 0.35, prompt_mean=768.0, prompt_cv=0.5,
                     prompt_max=2048, out_mean=24.0, out_max=64)
+
+#: doc-heavy long-prefill mix: mostly documents whose lengths are
+#: Pareto-distributed (tail index ~2.1: finite mean, huge variance), the
+#: heavy-tail regime where a single long prompt can stall a whole batch's
+#: decode — the prefill/decode interference case phase-aware schedulers
+#: and chunked-prefill papers target
+_DOC_HEAVY = (
+    RequestClass("chat", 0.35, prompt_mean=96.0, prompt_cv=0.6,
+                 prompt_max=512, out_mean=96.0, out_max=256),
+    RequestClass("doc", 0.65, prompt_mean=900.0, prompt_cv=0.5,
+                 prompt_max=4096, out_mean=24.0, out_max=64,
+                 prompt_dist="pareto", prompt_alpha=2.1),
+)
+
+#: named request mixes selectable per run (None = the profile's own mix)
+REQUEST_MIXES: Dict[str, Optional[Tuple[RequestClass, ...]]] = {
+    "default": None,
+    "doc_heavy": _DOC_HEAVY,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """The shape of a tenant's request-arrival intensity over time.
+
+    ``rate_at(t, base)`` is the instantaneous arrival rate (requests/s) at
+    ``t`` seconds after tenant arrival, where ``base`` is the profile's
+    (possibly scaled) mean rate:
+
+    * ``poisson`` — homogeneous: ``base`` everywhere (the legacy stream);
+    * ``diurnal`` — sinusoidal load curve with period ``period_s`` and
+      relative swing ``amplitude`` (peak = ``base * (1 + amplitude)``);
+    * ``flash`` — flash crowd: ``base`` except a ``flash_mult`` x burst on
+      ``[flash_t_s, flash_t_s + flash_dur_s)``.
+
+    Inhomogeneous streams are sampled by thinning: propose at
+    ``max_rate``, accept with probability ``rate_at / max_rate``.
+    """
+    kind: str = "poisson"                # "poisson" | "diurnal" | "flash"
+    period_s: float = 240.0
+    amplitude: float = 0.6
+    flash_t_s: float = 45.0
+    flash_dur_s: float = 25.0
+    flash_mult: float = 4.0
+
+    KINDS = ("poisson", "diurnal", "flash")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(
+                f"arrival kind must be one of {self.KINDS}, "
+                f"got {self.kind!r}")
+
+    def rate_at(self, t, base: float):
+        """Instantaneous rate at ``t`` (scalar or ndarray, vectorized)."""
+        if self.kind == "poisson":
+            return base * np.ones_like(np.asarray(t, dtype=float))
+        if self.kind == "diurnal":
+            return base * (1.0 + self.amplitude
+                           * np.sin(2.0 * math.pi
+                                    * np.asarray(t, dtype=float)
+                                    / self.period_s))
+        in_burst = ((np.asarray(t, dtype=float) >= self.flash_t_s)
+                    & (np.asarray(t, dtype=float)
+                       < self.flash_t_s + self.flash_dur_s))
+        return base * np.where(in_burst, self.flash_mult, 1.0)
+
+    def max_rate(self, base: float) -> float:
+        if self.kind == "diurnal":
+            return base * (1.0 + self.amplitude)
+        if self.kind == "flash":
+            return base * self.flash_mult
+        return base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,16 +234,48 @@ class RequestSpec:
     cls: str
 
 
-def sample_requests(profile: ServeProfile, horizon_s: float,
-                    seed: int) -> List[RequestSpec]:
-    """Deterministic Poisson request stream over ``[0, horizon_s)``.
+def _resolve_mix(profile: ServeProfile,
+                 mix: str) -> Tuple[RequestClass, ...]:
+    if mix not in REQUEST_MIXES:
+        raise ValueError(f"unknown request mix {mix!r}; "
+                         f"have {sorted(REQUEST_MIXES)}")
+    classes = REQUEST_MIXES[mix]
+    return profile.classes if classes is None else classes
+
+
+def sample_requests(profile: ServeProfile, horizon_s: float, seed: int,
+                    arrival: Optional[ArrivalProcess] = None,
+                    rate_scale: float = 1.0,
+                    mix: str = "default") -> List[RequestSpec]:
+    """Deterministic request stream over ``[0, horizon_s)``.
 
     Seeded per tenant (the serving plane passes ``hash(trace seed, tid)``),
     so the same tenant serves the same requests under every policy —
     request-level trajectories are comparable across policies and
     bit-reproducible across runs.
+
+    The historical configuration (homogeneous Poisson, ``rate_scale=1``,
+    the profile's own class mix) goes through the original draw-for-draw
+    scalar loop, so pre-existing streams are bit-identical.  Everything
+    else — inhomogeneous arrivals (thinning at ``max_rate``), scaled
+    rates, alternate mixes — is sampled by the chunked numpy path (still
+    deterministic per seed, but a different draw order).
     """
     rng = np.random.default_rng(seed)
+    classes = _resolve_mix(profile, mix)
+    base = profile.rate_per_s * rate_scale
+    legacy = ((arrival is None or arrival.kind == "poisson")
+              and rate_scale == 1.0 and mix == "default")
+    if legacy:
+        return _sample_legacy(rng, profile, horizon_s)
+    return _sample_batch(rng, classes, horizon_s, base,
+                         arrival or ArrivalProcess())
+
+
+def _sample_legacy(rng: np.random.Generator, profile: ServeProfile,
+                   horizon_s: float) -> List[RequestSpec]:
+    """The original scalar Poisson loop — draw order is load-bearing (the
+    serving gates pin trajectories built on these exact streams)."""
     weights = np.array([c.weight for c in profile.classes], float)
     weights /= weights.sum()
     out: List[RequestSpec] = []
@@ -186,3 +296,56 @@ def sample_requests(profile: ServeProfile, horizon_s: float,
         out.append(RequestSpec(rid=rid, t_s=t, prompt_tokens=prompt,
                                max_new_tokens=new, cls=cls.name))
         rid += 1
+
+
+def _sample_batch(rng: np.random.Generator,
+                  classes: Tuple[RequestClass, ...], horizon_s: float,
+                  base: float, arrival: ArrivalProcess) -> List[RequestSpec]:
+    """Chunked numpy sampler: thinning for inhomogeneous rates, per-class
+    vectorized length draws.  O(requests) with ~10 rng calls per tenant
+    instead of ~5 per request — what makes million-request traces cheap
+    to *sample*, not just to serve."""
+    mx = max(arrival.max_rate(base), 1e-9)
+    chunks: List[np.ndarray] = []
+    t = 0.0
+    # first chunk sized to the expected count; top-ups are small
+    size = max(256, int(mx * horizon_s * 1.25) + 16)
+    while t < horizon_s:
+        gaps = rng.exponential(1.0 / mx, size=size)
+        ts = t + np.cumsum(gaps)
+        u = rng.random(size=size)
+        keep = (u * mx <= arrival.rate_at(ts, base)) & (ts < horizon_s)
+        chunks.append(ts[keep])
+        t = float(ts[-1])
+        size = 256
+    ts = np.concatenate(chunks) if chunks else np.empty(0)
+    n = len(ts)
+    if n == 0:
+        return []
+    weights = np.array([c.weight for c in classes], float)
+    weights /= weights.sum()
+    ci = rng.choice(len(classes), size=n, p=weights)
+    prompts = np.empty(n, dtype=np.int64)
+    news = np.empty(n, dtype=np.int64)
+    for i, cls in enumerate(classes):
+        m = ci == i
+        k = int(m.sum())
+        if not k:
+            continue
+        if cls.prompt_dist == "pareto":
+            # Pareto-I with the class mean: x_m * (1 + Lomax(alpha))
+            a = cls.prompt_alpha
+            xm = cls.prompt_mean * (a - 1.0) / a
+            draw = xm * (1.0 + rng.pareto(a, size=k))
+        else:
+            sigma2 = math.log(1.0 + cls.prompt_cv ** 2)
+            mu = math.log(max(cls.prompt_mean, 1.0)) - sigma2 / 2.0
+            draw = rng.lognormal(mu, math.sqrt(sigma2), size=k)
+        prompts[m] = np.clip(draw, 8, cls.prompt_max).astype(np.int64)
+        news[m] = np.clip(rng.exponential(cls.out_mean, size=k),
+                          2, cls.out_max).astype(np.int64)
+    names = [c.name for c in classes]
+    return [RequestSpec(rid=i, t_s=float(ts[i]),
+                        prompt_tokens=int(prompts[i]),
+                        max_new_tokens=int(news[i]), cls=names[int(ci[i])])
+            for i in range(n)]

@@ -1,0 +1,160 @@
+"""Streaming latency statistics: exact counters + P² percentile sketches.
+
+At million-request scale the serving plane cannot materialize per-request
+latency lists (the O(requests) memory the PR-6 audit removes), so
+:class:`LatencyStats` keeps
+
+* exact count / sum / min / max (SLA-goodput itself is an exact counter
+  kept by :class:`~repro.sched.cluster.ClusterMetrics` — only the latency
+  *percentiles* are sketched);
+* the raw sample buffer while small (``CUTOVER`` observations), where
+  quantiles are computed exactly (numpy's linear interpolation, matching
+  the list-based percentiles this replaces bit-for-bit);
+* beyond that, one Jain & Chlamtac P² marker set per tracked quantile
+  (p50 / p95 / p99): O(1) memory and O(1) deterministic float arithmetic
+  per observation, no randomization — identical feed order gives identical
+  sketches, which is what lets the scalar and vectorized serving engines
+  be compared on full ``serving_summary()`` equality.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+#: quantiles every LatencyStats tracks once it switches to sketching
+TRACKED_QUANTILES: Tuple[float, ...] = (0.50, 0.95, 0.99)
+
+
+class P2Quantile:
+    """One P² (piecewise-parabolic) streaming quantile estimator.
+
+    Five markers track (min, p/2, p, (1+p)/2, max); each observation moves
+    the middle markers toward their desired positions with a parabolic
+    (fallback: linear) height adjustment.  Exact for the first five
+    observations; a deterministic O(1) approximation after.
+    """
+
+    __slots__ = ("p", "_q", "_n", "_np", "_dn", "count")
+
+    def __init__(self, p: float):
+        if not 0.0 < p < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {p}")
+        self.p = p
+        self._q: List[float] = []          # marker heights
+        self._n = [0, 1, 2, 3, 4]          # marker positions (0-based)
+        self._np = [0.0, 2 * p, 4 * p, 2 + 2 * p, 4.0]   # desired positions
+        self._dn = [0.0, p / 2, p, (1 + p) / 2, 1.0]     # position increments
+        self.count = 0
+
+    def add(self, x: float) -> None:
+        self.count += 1
+        q, n = self._q, self._n
+        if self.count <= 5:
+            q.append(x)
+            q.sort()
+            return
+        # locate the cell and clamp the extreme markers
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            for i in range(1, 4):
+                if x >= q[i]:
+                    k = i
+        for i in range(k + 1, 5):
+            n[i] += 1
+        for i in range(5):
+            self._np[i] += self._dn[i]
+        # adjust the interior markers toward their desired positions
+        for i in range(1, 4):
+            d = self._np[i] - n[i]
+            if (d >= 1.0 and n[i + 1] - n[i] > 1) or \
+                    (d <= -1.0 and n[i - 1] - n[i] < -1):
+                s = 1 if d >= 1.0 else -1
+                qp = self._parabolic(i, s)
+                if q[i - 1] < qp < q[i + 1]:
+                    q[i] = qp
+                else:
+                    q[i] = q[i] + s * (q[i + s] - q[i]) / (n[i + s] - n[i])
+                n[i] += s
+
+    def _parabolic(self, i: int, s: int) -> float:
+        q, n = self._q, self._n
+        return q[i] + s / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+
+    def value(self) -> float:
+        if self.count == 0:
+            return 0.0
+        if self.count <= 5:
+            # exact: numpy's linear-interpolation percentile on <=5 points
+            return float(np.percentile(np.array(self._q), self.p * 100.0))
+        return self._q[2]
+
+
+class LatencyStats:
+    """Streaming summary of one latency series (see module docstring).
+
+    ``percentile(q)`` is exact (numpy-identical) below ``CUTOVER``
+    observations and a P² estimate beyond; only the quantiles in
+    :data:`TRACKED_QUANTILES` are available once sketching starts.
+    """
+
+    #: raw-buffer size below which percentiles stay exact
+    CUTOVER = 64
+
+    __slots__ = ("count", "total", "vmin", "vmax", "_buf", "_sketches")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+        self._buf: Optional[List[float]] = []
+        self._sketches: Optional[List[P2Quantile]] = None
+
+    def add(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        self.total += x
+        if x < self.vmin:
+            self.vmin = x
+        if x > self.vmax:
+            self.vmax = x
+        if self._sketches is None:
+            self._buf.append(x)
+            if len(self._buf) > self.CUTOVER:
+                # switch to sketching: replay the buffer in arrival order
+                self._sketches = [P2Quantile(p) for p in TRACKED_QUANTILES]
+                for v in self._buf:
+                    for sk in self._sketches:
+                        sk.add(v)
+                self._buf = None
+            return
+        for sk in self._sketches:
+            sk.add(x)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """q-th percentile (q in [0, 100]).  Any q while the raw buffer is
+        live; only 100*TRACKED_QUANTILES once sketching started."""
+        if self.count == 0:
+            return 0.0
+        if self._sketches is None:
+            return float(np.percentile(np.array(self._buf), q))
+        for p, sk in zip(TRACKED_QUANTILES, self._sketches):
+            if abs(p * 100.0 - q) < 1e-9:
+                return sk.value()
+        raise ValueError(
+            f"percentile {q} not tracked once sketching starts "
+            f"(have {[p * 100 for p in TRACKED_QUANTILES]})")

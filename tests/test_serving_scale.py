@@ -1,0 +1,366 @@
+"""The vectorized serving plane at scale: scalar-vs-vector bit-identity,
+streaming P^2 percentile sketches, the new arrival processes (diurnal /
+flash-crowd thinning, heavy-tail prompts), byte-weighted decode HBM
+sharing, batched KV-arena queries, and the memory audit behind the
+million-request gate (no O(requests) state after detach).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import mesh_2d
+from repro.core import simulator as S
+from repro.sched import (ClusterScheduler, ServingConfig, make_policy,
+                         make_trace)
+from repro.sched.cluster import HBM_BYTE_WEIGHT
+from repro.serve.kv import TenantKV
+from repro.serve.plane import ServingPlane
+from repro.serve.requests import (REQUEST_MIXES, SERVE_PROFILES,
+                                  ArrivalProcess, sample_requests)
+from repro.serve.stats import TRACKED_QUANTILES, LatencyStats, P2Quantile
+
+
+# ---------------------------------------------------------------------------
+# arrival processes: determinism, thinning, heavy tails
+# ---------------------------------------------------------------------------
+
+class TestArrivalProcesses:
+    def test_deterministic_per_seed(self):
+        prof = SERVE_PROFILES["qwen2_0_5b"]
+        for arrival, mix, scale in (
+                (ArrivalProcess(kind="diurnal"), "default", 1.0),
+                (ArrivalProcess(kind="flash"), "doc_heavy", 2.0)):
+            a = sample_requests(prof, 120.0, seed=7, arrival=arrival,
+                                rate_scale=scale, mix=mix)
+            b = sample_requests(prof, 120.0, seed=7, arrival=arrival,
+                                rate_scale=scale, mix=mix)
+            assert a == b
+            c = sample_requests(prof, 120.0, seed=8, arrival=arrival,
+                                rate_scale=scale, mix=mix)
+            assert a != c
+
+    def test_explicit_poisson_routes_through_legacy_loop(self):
+        """A homogeneous unscaled default-mix stream must be byte-identical
+        to the historical sampler whether ``arrival`` is omitted or an
+        explicit poisson process — the gates pin trajectories on it."""
+        prof = SERVE_PROFILES["transformer"]
+        assert sample_requests(prof, 60.0, seed=3) == sample_requests(
+            prof, 60.0, seed=3, arrival=ArrivalProcess())
+
+    def test_rate_scale_scales_volume(self):
+        prof = SERVE_PROFILES["transformer"]          # 15 req/s base
+        n2 = len(sample_requests(prof, 400.0, seed=1, rate_scale=2.0))
+        n4 = len(sample_requests(prof, 400.0, seed=1, rate_scale=4.0))
+        assert n4 / n2 == pytest.approx(2.0, rel=0.10)
+
+    def test_diurnal_thinning_tracks_rate(self):
+        """Bin arrivals into the sine's rising and falling half-periods:
+        the count ratio must match the analytic intensity integral
+        (pi + 2a) / (pi - 2a) — the thinning acceptance test."""
+        prof = SERVE_PROFILES["qwen2_0_5b"]           # 8 req/s base
+        arr = ArrivalProcess(kind="diurnal", period_s=240.0, amplitude=0.6)
+        reqs = sample_requests(prof, 960.0, seed=11, arrival=arr)
+        ts = np.array([r.t_s for r in reqs])
+        phase = (ts % arr.period_s) / arr.period_s
+        peak = int(np.sum(phase < 0.5))               # sin >= 0 half
+        trough = int(np.sum(phase >= 0.5))
+        expect = (math.pi + 2 * arr.amplitude) / (math.pi
+                                                  - 2 * arr.amplitude)
+        assert peak / max(trough, 1) == pytest.approx(expect, rel=0.15)
+
+    def test_flash_crowd_burst(self):
+        prof = SERVE_PROFILES["qwen2_0_5b"]
+        arr = ArrivalProcess(kind="flash", flash_t_s=45.0, flash_dur_s=25.0,
+                             flash_mult=4.0)
+        reqs = sample_requests(prof, 120.0, seed=5, arrival=arr)
+        ts = np.array([r.t_s for r in reqs])
+        in_burst = int(np.sum((ts >= 45.0) & (ts < 70.0)))
+        baseline = int(np.sum((ts >= 90.0) & (ts < 115.0)))   # same width
+        assert in_burst / max(baseline, 1) == pytest.approx(4.0, rel=0.35)
+
+    def test_heavy_tail_prompt_moments(self):
+        """doc_heavy docs draw Pareto-I (alpha 2.1) prompts: the sample
+        mean sits near the class mean, and the tail is qualitatively
+        heavier than the default lognormal docs (clip-rail mass at
+        prompt_max, larger p99/p50 spread)."""
+        prof = SERVE_PROFILES["qwen2_0_5b"]
+        heavy = [r.prompt_tokens for r in sample_requests(
+            prof, 2000.0, seed=2, arrival=ArrivalProcess(), mix="doc_heavy",
+            rate_scale=2.0) if r.cls == "doc"]
+        cls = next(c for c in REQUEST_MIXES["doc_heavy"] if c.name == "doc")
+        assert len(heavy) > 2000
+        heavy = np.array(heavy, dtype=float)
+        # mean: Pareto mean 900 minus the mass clipped at prompt_max
+        assert 700.0 < heavy.mean() < 950.0
+        assert heavy.max() == cls.prompt_max          # tail hits the clip
+        light = np.array([r.prompt_tokens for r in sample_requests(
+            prof, 2000.0, seed=2, arrival=ArrivalProcess(),
+            rate_scale=2.0) if r.cls == "doc"], dtype=float)
+        spread_h = np.percentile(heavy, 99) / np.percentile(heavy, 50)
+        spread_l = np.percentile(light, 99) / np.percentile(light, 50)
+        assert spread_h > 1.5 * spread_l
+
+
+# ---------------------------------------------------------------------------
+# streaming percentile sketches (P^2)
+# ---------------------------------------------------------------------------
+
+class TestLatencyStats:
+    def test_exact_below_cutover(self):
+        rng = np.random.default_rng(0)
+        xs = rng.lognormal(0.0, 1.0, size=40)
+        st = LatencyStats()
+        for x in xs:
+            st.add(float(x))
+        for q in (50, 95, 99):
+            assert st.percentile(q) == pytest.approx(
+                float(np.percentile(xs, q)))
+
+    def test_sketch_tracks_numpy_percentiles(self):
+        rng = np.random.default_rng(1)
+        xs = rng.lognormal(0.0, 1.0, size=20_000)
+        st = LatencyStats()
+        for x in xs:
+            st.add(float(x))
+        assert st.count == 20_000
+        assert st.mean == pytest.approx(float(xs.mean()))
+        for q, tol in ((50, 0.05), (95, 0.05), (99, 0.10)):
+            assert st.percentile(q) == pytest.approx(
+                float(np.percentile(xs, q)), rel=tol)
+
+    def test_untracked_percentile_raises_after_cutover(self):
+        st = LatencyStats()
+        for i in range(200):
+            st.add(float(i))
+        with pytest.raises(ValueError):
+            st.percentile(90)
+        assert st.percentile(95) > 0.0
+
+    def test_deterministic_for_identical_feeds(self):
+        rng = np.random.default_rng(4)
+        xs = [float(x) for x in rng.exponential(1.0, size=5000)]
+        outs = []
+        for _ in range(2):
+            st = LatencyStats()
+            for x in xs:
+                st.add(x)
+            outs.append(tuple(st.percentile(100 * q)
+                              for q in TRACKED_QUANTILES))
+        assert outs[0] == outs[1]
+
+    def test_p2_exact_on_tiny_samples(self):
+        q = P2Quantile(0.50)
+        for x in (5.0, 1.0, 3.0):
+            q.add(x)
+        assert q.value() == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# scalar-vs-vector bit-identity at the plane level
+# ---------------------------------------------------------------------------
+
+def _phase(prefill, step_cycles, hbm=720.0, stall=18.0, freq=500e6):
+    return S.PhaseModel(prefill_tokens_per_s=prefill,
+                        step_base_cycles=step_cycles,
+                        hbm_bytes_per_cycle=hbm,
+                        stall_cycles_per_range=stall, freq_hz=freq)
+
+
+_PLANE_TENANTS = (("transformer", 1), ("qwen2_0_5b", 2), ("llama3_2_1b", 3))
+_PLANE_PHASES = {1: _phase(60_000.0, 2e5), 2: _phase(25_000.0, 6e5),
+                 3: _phase(9_000.0, 1.6e6)}
+
+
+def _drive_plane(engine, arrival=None, mix="default", rate_scale=1.0,
+                 record=True):
+    """Attach three tenants, advance irregular windows with a mid-run
+    departure, and capture everything observable: the streamed sink feed,
+    per-window pressure signals, and the departure folds."""
+    emitted = []
+    plane = ServingPlane(seed=3, engine=engine, record_requests=record,
+                         arrival=arrival, rate_scale=rate_scale, mix=mix,
+                         sink=lambda *a: emitted.append(a))
+    for model, tid in _PLANE_TENANTS:
+        # depart_s bounds the sampled stream — keep it just past the
+        # driven windows (14 x 1.3 s)
+        assert plane.attach(tid, model, 0.0, 0.0, 25.0)
+    folds, pressures = {}, []
+    t = 0.0
+    for i in range(14):
+        t2 = t + 1.3
+        entries = [(tid, t, _PLANE_PHASES[tid]) for _, tid in _PLANE_TENANTS
+                   if plane.is_attached(tid)]
+        plane.advance_all(entries, t2)
+        pressures.extend(plane.pressure(tid) for _, tid in _PLANE_TENANTS
+                         if plane.is_attached(tid))
+        t = t2
+        if i == 7:
+            folds[2] = plane.detach(2)           # mid-run departure
+    for _, tid in _PLANE_TENANTS:
+        if plane.is_attached(tid):
+            folds[tid] = plane.detach(tid)
+    return emitted, pressures, folds, plane.peak_live_records
+
+
+class TestVectorScalarIdentity:
+    @pytest.mark.parametrize("arrival,mix,scale", [
+        (None, "default", 1.0),
+        (ArrivalProcess(kind="diurnal"), "doc_heavy", 1.0),
+        (ArrivalProcess(kind="flash"), "default", 2.0),
+    ])
+    def test_plane_identity(self, arrival, mix, scale):
+        vec = _drive_plane("vector", arrival, mix, scale)
+        sca = _drive_plane("scalar", arrival, mix, scale)
+        assert vec[0] == sca[0]                  # streamed completions
+        assert vec[1] == sca[1]                  # pressure signals
+        assert vec[2] == sca[2]                  # departure folds
+        assert sum(len(f.records) for f in vec[2].values()) > 0
+
+    def test_scheduler_identity_short_horizon(self):
+        outs = {}
+        for engine in ServingPlane.ENGINES:
+            trace = make_trace("serving", horizon_s=40.0)
+            policy = make_policy("vnpu", mesh_2d(8, 8))
+            sch = ClusterScheduler(policy, admission="sla",
+                                   serving=ServingConfig(engine=engine))
+            m = sch.run(trace, trace_name="serving")
+            outs[engine] = (m.request_log, m.n_resizes, m.serving_summary())
+        assert outs["vector"] == outs["scalar"]
+
+    def test_unknown_engine_rejected(self):
+        with pytest.raises(ValueError):
+            ServingPlane(engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# memory audit: nothing O(requests) survives a detach
+# ---------------------------------------------------------------------------
+
+def _serving_run(horizon, **cfg_kw):
+    trace = make_trace("serving", horizon_s=horizon)
+    policy = make_policy("vnpu", mesh_2d(8, 8))
+    sch = ClusterScheduler(policy, admission="sla",
+                           serving=ServingConfig(**cfg_kw))
+    return sch.run(trace, trace_name="serving")
+
+
+class TestMemoryAudit:
+    def test_streaming_mode_keeps_no_records(self):
+        m = _serving_run(60.0, record_requests=False)
+        assert m.request_log == []
+        assert m.peak_live_records == 0          # no records materialized
+        s = m.serving_summary()
+        assert s["requests"] > 500 and s["completed"] > 0
+        assert s["ttft_p99_s"] > 0.0 and s["tpot_p99_s"] > 0.0
+
+    def test_record_mode_peak_is_bounded_by_churn(self):
+        """With records on, detach folds each tenant's records out of the
+        plane — the high-water mark stays well under the total request
+        volume on a trace with tenant churn (O(attached backlog), not
+        O(all requests ever))."""
+        m = _serving_run(90.0, record_requests=True)
+        assert 0 < m.peak_live_records < 0.7 * m.requests_arrived
+
+    def test_streaming_and_record_modes_agree(self):
+        a = _serving_run(45.0, record_requests=True)
+        b = _serving_run(45.0, record_requests=False)
+        assert a.serving_summary() == b.serving_summary()
+        assert len(a.request_log) > 0 and b.request_log == []
+
+
+# ---------------------------------------------------------------------------
+# byte-weighted decode HBM sharing (pinned regression)
+# ---------------------------------------------------------------------------
+
+def _skeleton(model, k):
+    from repro.sched.traces import get_serving_workload
+    g = get_serving_workload(model)
+    return S.tensor_skeleton(g, list(range(k)), mesh_2d(8, 8), S.SIM_CONFIG)
+
+
+class TestByteWeightedHBM:
+    def test_equal_split_share_is_legacy_identical(self):
+        """share = 1/clients must reproduce the legacy equal-split model
+        bit-for-bit (0.25 * B and B / 4 are the same float)."""
+        sk = _skeleton("qwen2_0_5b", 6)
+        prof = SERVE_PROFILES["qwen2_0_5b"]
+        rep = S.finish_tensor(sk)
+        legacy = S.derive_phase_model(sk, rep, proxy_seq=prof.proxy_seq,
+                                      decode_hbm_clients=4)
+        shared = S.derive_phase_model(sk, rep, proxy_seq=prof.proxy_seq,
+                                      decode_hbm_clients=4, hbm_share=0.25)
+        assert shared == legacy
+
+    def test_share_scales_streamed_bytes_pinned(self):
+        """The weighted share is charged to the streamed decode bytes:
+        halving the share adds exactly weights/(B*s) worth of cycles, and
+        the exported KV bandwidth is exactly B*s."""
+        sk = _skeleton("qwen2_0_5b", 6)
+        prof = SERVE_PROFILES["qwen2_0_5b"]
+        rep = S.finish_tensor(sk)
+        B = S.SIM_CONFIG.hbm_bytes_per_cycle
+        wbytes = sk.graph.total_weight_bytes
+        hi = S.derive_phase_model(sk, rep, proxy_seq=prof.proxy_seq,
+                                  decode_hbm_clients=4, hbm_share=0.5)
+        lo = S.derive_phase_model(sk, rep, proxy_seq=prof.proxy_seq,
+                                  decode_hbm_clients=4, hbm_share=0.25)
+        assert not hi.weights_resident               # it streams
+        assert hi.hbm_bytes_per_cycle == pytest.approx(B * 0.5)
+        assert lo.hbm_bytes_per_cycle == pytest.approx(B * 0.25)
+        extra_s = (wbytes / (B * 0.25) - wbytes / (B * 0.5)) / hi.freq_hz
+        assert lo.decode_step_s(0, 0) - hi.decode_step_s(0, 0) == \
+            pytest.approx(extra_s, rel=1e-9)
+        assert lo.decode_step_s(0, 0) > hi.decode_step_s(0, 0)
+
+    def test_blend_constant_pinned(self):
+        """The scheduler's share blend (see cluster._hbm_share_keys) is a
+        calibrated constant: the serving gate's goodput ordering
+        (vNPU >= MIG/UVM) was validated at this value."""
+        assert HBM_BYTE_WEIGHT == 0.25
+
+    def test_blend_conserves_port(self):
+        """Convex-blend shares over any busy census sum to 1."""
+        demands = [11_683 << 20, 1_034 << 20, 64 << 20, 128 << 20]
+        total = sum(demands)
+        n = len(demands)
+        shares = [(1.0 - HBM_BYTE_WEIGHT) / n + HBM_BYTE_WEIGHT * d / total
+                  for d in demands]
+        assert sum(shares) == pytest.approx(1.0)
+        assert all(s >= (1.0 - HBM_BYTE_WEIGHT) / n for s in shares)
+        assert shares[0] == max(shares)              # 7B earns the most
+
+
+# ---------------------------------------------------------------------------
+# batched KV-arena queries
+# ---------------------------------------------------------------------------
+
+class TestKVBatchedQueries:
+    def _kv(self):
+        return TenantKV(arena_bytes=32 << 20, block_bytes=1 << 20,
+                        kv_bytes_per_token=16 << 10)
+
+    def test_block_counts_matches_n_ranges(self):
+        kv = self._kv()
+        for rid, tokens in ((1, 10), (2, 100), (3, 300)):
+            assert kv.try_admit(rid, tokens)
+        rids = [3, 1, 2, 99]
+        counts = kv.block_counts(rids)
+        assert counts.dtype == np.int64
+        assert counts.tolist() == [kv.n_ranges(r) for r in rids]
+        assert counts[3] == 0                        # unknown rid
+
+    def test_capacity_limit_is_exact_growth_inverse(self):
+        """tokens <= capacity_limit_tokens(rid) iff try_grow allocates
+        nothing — the vectorized plane's O(1) precheck must agree with
+        the real allocator on every boundary."""
+        kv = self._kv()
+        assert kv.try_admit(7, 100)
+        cap = kv.capacity_limit_tokens(7)
+        blocks = kv.n_ranges(7)
+        assert cap == blocks * (1 << 20) // (16 << 10)
+        assert kv.try_grow(7, cap)
+        assert kv.n_ranges(7) == blocks              # no-op at the limit
+        assert kv.try_grow(7, cap + 1)
+        assert kv.n_ranges(7) == blocks + 1          # one step past: alloc
