@@ -1,0 +1,46 @@
+"""Shared ``--profile`` support for the benchmark CLIs.
+
+Wraps a run in :mod:`cProfile` and prints the top cumulative hotspots, so
+perf PRs start from measurements instead of guesses:
+
+    PYTHONPATH=src python benchmarks/serving_sim.py --profile ...
+    PYTHONPATH=src python benchmarks/cluster_sim.py --profile ...
+    PYTHONPATH=src python benchmarks/fleet_sim.py   --profile ...
+
+The CLIs use the re-entry pattern: parse args, and when ``--profile`` is
+set, re-invoke their own ``main`` (flag stripped) inside ``profiled()`` —
+every code path of the benchmark is covered without restructuring it.
+"""
+from __future__ import annotations
+
+import contextlib
+import cProfile
+import pstats
+import sys
+from typing import Iterator, List, Optional, Sequence
+
+#: how many cumulative-time rows the report prints
+TOP_N = 20
+
+
+@contextlib.contextmanager
+def profiled(top_n: int = TOP_N, stream=None) -> Iterator[cProfile.Profile]:
+    """Profile the with-block and print the ``top_n`` hottest functions by
+    cumulative time (file/line noise stripped) when it exits."""
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        yield prof
+    finally:
+        prof.disable()
+        out = stream or sys.stdout
+        print(f"\n--- cProfile: top {top_n} by cumulative time ---",
+              file=out)
+        stats = pstats.Stats(prof, stream=out)
+        stats.strip_dirs().sort_stats("cumulative").print_stats(top_n)
+
+
+def strip_profile_flag(argv: Optional[Sequence[str]]) -> List[str]:
+    """The argv to re-enter ``main`` with: ``--profile`` removed."""
+    args = list(argv) if argv is not None else sys.argv[1:]
+    return [a for a in args if a != "--profile"]

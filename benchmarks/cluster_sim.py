@@ -354,8 +354,22 @@ def main(argv=None) -> int:
     ap.add_argument("--bench-out", default=str(BENCH_PATH),
                     help="where --gate writes the machine-readable "
                          "BENCH_cluster_sim.json perf record")
+    ap.add_argument("--heat-aware", action="store_true",
+                    help="link-heatmap-aware vNPU admission: equal-TED "
+                         "placements prefer regions whose boundary links "
+                         "are cold in the interference ledger (off = "
+                         "historical placement, bit-identical)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile the run and print the top-20 "
+                         "cumulative hotspots")
     ap.add_argument("--json", action="store_true", help="machine output")
     args = ap.parse_args(argv)
+
+    if args.profile:
+        sys.path.insert(0, str(Path(__file__).resolve().parent))
+        from _profile import profiled, strip_profile_flag
+        with profiled():
+            return main(strip_profile_flag(argv))
 
     try:
         rows, cols = (int(x) for x in args.mesh.split(","))
@@ -399,7 +413,9 @@ def main(argv=None) -> int:
 
     results = []
     for name in policies:
-        policy = make_policy(name, mesh_2d(rows, cols))
+        kwargs = {"heat_aware": True} if (
+            name == "vnpu" and args.heat_aware) else {}
+        policy = make_policy(name, mesh_2d(rows, cols), **kwargs)
         sched = ClusterScheduler(policy, hw=S.SIM_CONFIG,
                                  epoch_s=args.epoch,
                                  defrag=not args.no_defrag,

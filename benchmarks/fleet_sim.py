@@ -1,0 +1,332 @@
+"""Fleet federation benchmark: N pods, one deterministic router, one
+inter-pod switch — serial vs process-parallel execution.
+
+Builds a :class:`~repro.fleet.Fleet` of ``--pods`` pods (each its own
+mesh + placement policy + cluster scheduler + serving plane), routes the
+``fleet-serving`` arrival stream through the deterministic
+:class:`~repro.fleet.FleetRouter`, charges cross-pod evacuations as
+checkpoint transfers on the :class:`~repro.fleet.PodSwitch`, and advances
+the pods in bounded-lag windows.  ``--workers N`` forks the
+process-parallel executor; ``--workers 1`` is the serial reference — the
+two produce bit-identical per-pod trajectories and fleet summaries.
+
+Run:
+    PYTHONPATH=src python benchmarks/fleet_sim.py --pods 4 --horizon 60
+    PYTHONPATH=src python benchmarks/fleet_sim.py --pods 8 --workers 4 \\
+        --upgrade 3:120:30 --fail 5:200
+
+CI gate (merges its numbers into ``BENCH_cluster_sim.json``):
+    PYTHONPATH=src python benchmarks/fleet_sim.py --gate
+first pins the parallel executor bit-identical to the serial reference on
+a heterogeneous 3-pod fleet (mixed mesh sizes and ``mem_interface``
+layouts, full request logs, a rolling upgrade AND a pod failure
+mid-trace), then replays the 8-pod ``fleet-serving`` trace at the
+calibrated request-rate scale and fails unless (a) the small-fleet
+trajectories and summaries match exactly, (b) >= 10M aggregate requests
+arrive inside the wall budget, (c) the big serial and parallel runs agree
+on every per-pod digest and the fleet ``serving_summary()``, and (d) on
+machines with >= 4 usable cores the parallel executor is >= 3x faster
+than serial (on smaller machines the measured speedup is recorded but
+not enforced — a fork can't beat the core count).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from cluster_sim import BENCH_PATH, _write_bench          # noqa: E402
+from repro.fleet import (Fleet, FleetConfig, PodSpec,     # noqa: E402
+                         ROUTING_POLICIES, Scenario, fleet_trace)
+
+GATE_PODS = 8
+GATE_MESH = (16, 16)
+GATE_TRACE = "fleet-serving"
+GATE_RATE = 13.0                 # calibrated: >= 10M aggregate requests
+GATE_MIN_REQUESTS = 10_000_000
+GATE_WALL_BUDGET_S = 2400.0      # per run (serial and parallel each)
+GATE_SPEEDUP_FLOOR = 3.0
+GATE_SPEEDUP_MIN_CORES = 4       # floor enforced only with enough cores
+
+#: serving-realistic vNPU config (matches serving_sim.py's baseline): the
+#: vectorized bipartite scorer without exact-B&B escalation — placement
+#: quality is identical on the serving trace class and stays cheap at
+#: fleet request volumes (the exact mapper was 75% of fleet wall time)
+POD_POLICY_KWARGS = {"mapper": "bipartite"}
+
+#: the heterogeneous identity fleet: mixed mesh sizes and mem-interface
+#: layouts, so the bit-identity check covers per-pod topology divergence
+IDENTITY_PODS = [
+    PodSpec(pod_id=0, rows=16, cols=16, policy_kwargs=POD_POLICY_KWARGS),
+    PodSpec(pod_id=1, rows=12, cols=12, mem_interface_cols=(0, 11),
+            policy_kwargs=POD_POLICY_KWARGS),
+    PodSpec(pod_id=2, rows=16, cols=16, mem_interface_cols=(0, 15),
+            policy_kwargs=POD_POLICY_KWARGS),
+]
+IDENTITY_HORIZON_S = 40.0
+IDENTITY_SCENARIOS = [
+    Scenario("upgrade", t_s=15.0, pod_id=1, duration_s=10.0),
+    Scenario("pod-failure", t_s=25.0, pod_id=2),
+]
+
+
+def usable_cores() -> int:
+    """Cores this process may actually run on (cgroup/affinity aware)."""
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:                     # non-Linux fallback
+        return os.cpu_count() or 1
+
+
+def build_pods(n, rows, cols):
+    return [PodSpec(pod_id=i, rows=rows, cols=cols,
+                    policy_kwargs=POD_POLICY_KWARGS) for i in range(n)]
+
+
+def run_fleet(pods, *, seed=0, window_s=5.0, routing="least-loaded",
+              rate_scale=1.0, horizon_s=None, record=False, workers=1,
+              scenarios=()):
+    """One fleet run: fresh Fleet + trace, returns FleetMetrics."""
+    cfg = FleetConfig(seed=seed, window_s=window_s, routing=routing,
+                      trace_name=GATE_TRACE, record_requests=record,
+                      rate_scale=rate_scale)
+    fleet = Fleet(pods, cfg)
+    trace = fleet_trace(len(pods), seed=seed, horizon_s=horizon_s)
+    return fleet.run(trace, scenarios=scenarios, workers=workers)
+
+
+def _print_summary(m):
+    s = m.summary()
+    r, sw = s["router"], s["switch"]
+    print(f"pods={s['pods']} windows={s['windows']} workers={s['workers']} "
+          f"horizon={s['horizon_s']:.0f}s wall={s['wall_s']:.1f}s")
+    print(f"requests={s['requests']} completed={s['completed']} "
+          f"goodput={s['sla_goodput_rps']:.2f} rps "
+          f"agg={s['agg_req_per_s']:.0f} req/s")
+    print(f"ttft p50/p95/p99 = {s['ttft_p50_s']:.3f}/{s['ttft_p95_s']:.3f}/"
+          f"{s['ttft_p99_s']:.3f} s   tpot p50/p99 = "
+          f"{s['tpot_p50_s']:.4f}/{s['tpot_p99_s']:.4f} s")
+    print(f"router: routed={r['routed']} unroutable={r['unroutable']} "
+          f"migrations={r['migrations']} affinity_hits={r['affinity_hits']} "
+          f"by_pod={r['routed_by_pod']}")
+    print(f"switch: transfers={sw['n_transfers']} "
+          f"bytes={sw['bytes_total']} busy={sw['busy_s']}s "
+          f"queued={sw['queued_s']}s overflows={sw['buffer_overflows']}")
+
+
+def _bench_entry(mode, m, extra=None):
+    s = m.summary()
+    entry = {
+        "trace": GATE_TRACE,
+        "mesh": f"{GATE_PODS}x{GATE_MESH[0]}x{GATE_MESH[1]}-fleet",
+        "mode": mode,
+        "wall_s": s["wall_s"],
+        "workers": s["workers"],
+        "windows": s["windows"],
+        "requests": s["requests"],
+        "completed": s["completed"],
+        "agg_req_per_s": s["agg_req_per_s"],
+        "sla_goodput_rps": s["sla_goodput_rps"],
+        "ttft_p99_s": s["ttft_p99_s"],
+        "tpot_p99_s": s["tpot_p99_s"],
+        "routed": s["router"]["routed"],
+        "unroutable": s["router"]["unroutable"],
+        "migrations": s["router"]["migrations"],
+        "switch_transfers": s["switch"]["n_transfers"],
+    }
+    if extra:
+        entry.update(extra)
+    return entry
+
+
+def _identity_check():
+    """Serial vs parallel on the heterogeneous 3-pod fleet, full request
+    logs, an upgrade AND a pod failure mid-trace."""
+    runs = {}
+    for workers in (1, 2):
+        runs[workers] = run_fleet(
+            list(IDENTITY_PODS), seed=7, horizon_s=IDENTITY_HORIZON_S,
+            record=True, workers=workers,
+            scenarios=list(IDENTITY_SCENARIOS))
+    a, b = runs[1], runs[2]
+    return {
+        "pods": len(IDENTITY_PODS),
+        "digests_identical": a.pod_digests() == b.pod_digests(),
+        "summaries_identical": a.serving_summary() == b.serving_summary(),
+        "requests": a.requests_arrived,
+        "evacuated": a.serving_summary()["evacuated"],
+        "migrations": a.serving_summary()["migrations"],
+        "switch_transfers": a.serving_summary()["switch"]["n_transfers"],
+    }
+
+
+def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
+    """The fleet gate (see module docstring)."""
+    identity = _identity_check()
+    identity_ok = (identity["digests_identical"]
+                   and identity["summaries_identical"])
+
+    cores = usable_cores()
+    workers = min(GATE_PODS, max(cores, 2))
+    pods = build_pods(GATE_PODS, *GATE_MESH)
+    scenarios = [Scenario("upgrade", t_s=120.0, pod_id=3, duration_s=30.0)]
+
+    serial = run_fleet(pods, rate_scale=GATE_RATE, workers=1,
+                       scenarios=list(scenarios))
+    par = run_fleet(build_pods(GATE_PODS, *GATE_MESH),
+                    rate_scale=GATE_RATE, workers=workers,
+                    scenarios=list(scenarios))
+
+    scale_identical = (serial.pod_digests() == par.pod_digests()
+                       and serial.serving_summary()
+                       == par.serving_summary())
+    requests = serial.requests_arrived
+    volume_ok = requests >= GATE_MIN_REQUESTS
+    wall_ok = (serial.wall_s <= GATE_WALL_BUDGET_S
+               and par.wall_s <= GATE_WALL_BUDGET_S)
+    speedup = serial.wall_s / max(par.wall_s, 1e-9)
+    enforce_speedup = cores >= GATE_SPEEDUP_MIN_CORES
+    speedup_ok = (not enforce_speedup) or speedup >= GATE_SPEEDUP_FLOOR
+
+    report = {
+        "pods": GATE_PODS,
+        "mesh": list(GATE_MESH),
+        "trace": GATE_TRACE,
+        "rate_scale": GATE_RATE,
+        "identity": identity,
+        "identity_ok": identity_ok,
+        "requests": requests,
+        "min_requests": GATE_MIN_REQUESTS,
+        "volume_ok": volume_ok,
+        "scale_identical": scale_identical,
+        "serial_wall_s": round(serial.wall_s, 2),
+        "parallel_wall_s": round(par.wall_s, 2),
+        "wall_budget_s": GATE_WALL_BUDGET_S,
+        "wall_ok": wall_ok,
+        "usable_cores": cores,
+        "workers": par.workers,
+        "speedup": round(speedup, 2),
+        "speedup_floor": GATE_SPEEDUP_FLOOR,
+        "speedup_enforced": enforce_speedup,
+        "speedup_ok": speedup_ok,
+        "router": serial.router.as_dict(),
+        "switch": serial.switch.as_dict(),
+        "gate_ok": (identity_ok and volume_ok and scale_identical
+                    and wall_ok and speedup_ok),
+    }
+    entries = [
+        _bench_entry("fleet-serial", serial),
+        _bench_entry(f"fleet-parallel-w{par.workers}", par,
+                     extra={"speedup": round(speedup, 2)}),
+    ]
+    _write_bench("fleet", report, entries, bench_out)
+    if json_out:
+        print(json.dumps(report, indent=2))
+    else:
+        print(f"identity(3-pod hetero)={'OK' if identity_ok else 'DIVERGED'}"
+              f" {identity}")
+        print(f"requests={requests} (>= {GATE_MIN_REQUESTS}: "
+              f"{'OK' if volume_ok else 'FAIL'}) "
+              f"scale_identity={'OK' if scale_identical else 'DIVERGED'}")
+        print(f"serial={serial.wall_s:.1f}s parallel={par.wall_s:.1f}s "
+              f"(budget {GATE_WALL_BUDGET_S:.0f}s: "
+              f"{'OK' if wall_ok else 'FAIL'}) "
+              f"speedup={speedup:.2f}x on {cores} cores "
+              f"(floor {GATE_SPEEDUP_FLOOR}x "
+              f"{'enforced' if enforce_speedup else 'not enforced'}: "
+              f"{'OK' if speedup_ok else 'FAIL'})")
+        print(f"-> {'OK' if report['gate_ok'] else 'FAIL'}")
+    return 0 if report["gate_ok"] else 1
+
+
+def _parse_scenarios(args, ap):
+    out = []
+    for spec in args.upgrade or ():
+        try:
+            pod, t, dur = (float(x) for x in spec.split(":"))
+        except ValueError:
+            ap.error(f"--upgrade wants POD:T:DURATION (got {spec!r})")
+        out.append(Scenario("upgrade", t_s=t, pod_id=int(pod),
+                            duration_s=dur))
+    for spec in args.fail or ():
+        try:
+            pod, t = (float(x) for x in spec.split(":"))
+        except ValueError:
+            ap.error(f"--fail wants POD:T (got {spec!r})")
+        out.append(Scenario("pod-failure", t_s=t, pod_id=int(pod)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pods", type=int, default=4,
+                    help="number of pods in the fleet")
+    ap.add_argument("--mesh", default="16,16",
+                    help="per-pod mesh rows,cols")
+    ap.add_argument("--horizon", type=float, default=None,
+                    help="arrival horizon in seconds (trace default)")
+    ap.add_argument("--window", type=float, default=5.0,
+                    help="bounded-lag window length in seconds")
+    ap.add_argument("--rate-scale", type=float, default=1.0,
+                    help="multiplier on every tenant's request rate")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="1 = serial reference; N>1 forks the "
+                         "process-parallel executor (same trajectories)")
+    ap.add_argument("--routing", default="least-loaded",
+                    choices=sorted(ROUTING_POLICIES),
+                    help="fleet routing policy")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fleet seed (per-pod stream seeds are derived)")
+    ap.add_argument("--upgrade", action="append", metavar="POD:T:DUR",
+                    help="rolling upgrade: drain POD at T for DUR seconds "
+                         "(repeatable)")
+    ap.add_argument("--fail", action="append", metavar="POD:T",
+                    help="permanent pod failure at T (repeatable)")
+    ap.add_argument("--record-requests", action="store_true",
+                    help="materialize per-request records (identity "
+                         "debugging; off = streamed P^2 percentiles)")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI mode: heterogeneous bit-identity, then the "
+                         "8-pod >= 10M-request budgeted run; merges "
+                         "BENCH_cluster_sim.json")
+    ap.add_argument("--bench-out", default=str(BENCH_PATH),
+                    help="where --gate merges the machine-readable "
+                         "BENCH record")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in cProfile and print the top-20 "
+                         "cumulative hotspots")
+    ap.add_argument("--json", action="store_true", help="machine output")
+    args = ap.parse_args(argv)
+
+    if args.profile:
+        from _profile import profiled, strip_profile_flag
+        with profiled():
+            return main(strip_profile_flag(argv))
+
+    if args.gate:
+        return run_gate(args.json, args.bench_out)
+
+    try:
+        rows, cols = (int(x) for x in args.mesh.split(","))
+    except ValueError:
+        ap.error(f"--mesh wants 'rows,cols' (got {args.mesh!r})")
+    scenarios = _parse_scenarios(args, ap)
+    m = run_fleet(build_pods(args.pods, rows, cols), seed=args.seed,
+                  window_s=args.window, routing=args.routing,
+                  rate_scale=args.rate_scale, horizon_s=args.horizon,
+                  record=args.record_requests, workers=args.workers,
+                  scenarios=scenarios)
+    if args.json:
+        print(json.dumps(m.summary(), indent=2))
+    else:
+        _print_summary(m)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -341,8 +341,16 @@ def main(argv=None) -> int:
     ap.add_argument("--bench-out", default=str(BENCH_PATH),
                     help="where --gate merges the machine-readable "
                          "BENCH record")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in cProfile and print the top-20 "
+                         "cumulative hotspots")
     ap.add_argument("--json", action="store_true", help="machine output")
     args = ap.parse_args(argv)
+
+    if args.profile:
+        from _profile import profiled, strip_profile_flag
+        with profiled():
+            return main(strip_profile_flag(argv))
 
     if args.gate:
         return run_gate(args.json, args.bench_out)

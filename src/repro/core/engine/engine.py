@@ -94,6 +94,14 @@ class MappingEngine:
         self.default_mapper = mapper
         self.max_candidates = max_candidates
         self.exact_max = exact_max
+        # link-heat-aware admission (opt in): a callable returning the
+        # current per-directed-link occupancy (the scheduler binds the
+        # InterferenceLedger's ``link_loads``).  When set, equal-TED
+        # candidates are tie-broken toward the one whose *boundary* links
+        # are coldest — placements snuggle into quiet neighborhoods.  When
+        # None (the default) selection is exactly the historical
+        # first-strictly-better scan, bit for bit.
+        self.heat_fn = None
         self._wspur: Dict[str, np.ndarray] = {}
         # interned whole-pool canonical keys -> small-int ids.  Bounded
         # LRU (keys are multi-KB nested tuples at 1024 cores); ids come
@@ -198,6 +206,22 @@ class MappingEngine:
             Wspur=self._wspur_for(em, em_id), exact_max=self.exact_max,
             max_candidates=maxc, stats=self.stats)
 
+        # one heat snapshot per call: the tie-break must compare every
+        # candidate against the same occupancy picture (and never leak
+        # into cache keys — heat varies per instant, placements recur)
+        loads = self.heat_fn() if self.heat_fn is not None else None
+
+        def better(candidate: MappingResult,
+                   incumbent: Optional[MappingResult]) -> bool:
+            if incumbent is None or candidate.ted < incumbent.ted:
+                return True
+            if loads is None or candidate.ted > incumbent.ted:
+                return False
+            # equal TED: prefer the colder boundary (strictly — ties keep
+            # the incumbent, preserving the first-wins scan order)
+            return (self._boundary_heat(candidate.nodes, loads)
+                    < self._boundary_heat(incumbent.nodes, loads))
+
         best: Optional[MappingResult] = None
         evaluated = 0
         for cid, comp, sig in self._component_sigs(k, free_override):
@@ -230,9 +254,13 @@ class MappingEngine:
                         result = decode_result(entry, sig.order, req_sig.order)
                     evaluated += (entry.candidates_evaluated
                                   if entry is not None else 0)
-                    if result is not None and self._better(result, best):
+                    if result is not None and better(result, best):
                         best = result
-                    if best is not None and best.ted == 0.0:
+                    # a TED-0 hit ends the scan — except under heat, where
+                    # another component may host an equally-perfect but
+                    # colder placement
+                    if loads is None and best is not None \
+                            and best.ted == 0.0:
                         break
                     continue
             result = strategy.map_component(ctx, comp)
@@ -255,9 +283,9 @@ class MappingEngine:
                 self.stats.uncacheable += 1
             if result is not None:
                 evaluated += result.candidates_evaluated
-                if self._better(result, best):
+                if better(result, best):
                     best = result
-                if best.ted == 0.0:
+                if loads is None and best.ted == 0.0:
                     break
 
         if not require_connected:
@@ -309,6 +337,17 @@ class MappingEngine:
     def _better(candidate: MappingResult,
                 incumbent: Optional[MappingResult]) -> bool:
         return incumbent is None or candidate.ted < incumbent.ted
+
+    def _boundary_heat(self, nodes: FrozenSet[int], loads) -> float:
+        """Summed occupancy of the directed links crossing the candidate's
+        boundary (both directions) — the interference this placement would
+        trade with its neighbors.  O(|nodes| x degree)."""
+        heat = 0.0
+        for n in nodes:
+            for m in self.adj[n]:
+                if m not in nodes:
+                    heat += loads.get((n, m), 0.0) + loads.get((m, n), 0.0)
+        return heat
 
     def _components(self, k: int, free_override: Optional[Iterable[int]]
                     ) -> List[Tuple[Optional[int], FrozenSet[int]]]:

@@ -164,6 +164,9 @@ class ClusterMetrics:
     n_rejected: int = 0
     n_migrations: int = 0
     n_failed_cores: int = 0
+    # residents handed back to a fleet router by ``evacuate()`` (pod drain
+    # or pod failure) — they depart this pod but are not rejections
+    n_evacuated: int = 0
     # placement attempts skipped because the spec's size class last failed
     # against an identical free pool (drain-queue probe memoization)
     n_probe_skips: int = 0
@@ -309,6 +312,8 @@ class ClusterMetrics:
         }
         if self.n_failed_cores:
             out["failed_cores"] = self.n_failed_cores
+        if self.n_evacuated:
+            out["evacuated"] = self.n_evacuated
         if self.n_probe_skips:
             out["probe_skips"] = self.n_probe_skips
         if self.engine_counters:
@@ -358,6 +363,11 @@ class ClusterScheduler:
             else probe_memo
         self.ledger: Optional[InterferenceLedger] = (
             InterferenceLedger(self.topo) if rescore == "ledger" else None)
+        # link-heatmap-aware admission: bind the ledger's per-directed-link
+        # occupancy into the policy's MappingEngine (vNPU opt-in flag; see
+        # VNPUPolicy.bind_link_heat — no ledger, no heat)
+        if self.ledger is not None and getattr(policy, "heat_aware", False):
+            policy.bind_link_heat(self.ledger)
         # request-level serving plane (opt in): continuous batching per
         # resident LLM tenant + the elastic-resize pressure controller
         self.serving = serving
@@ -394,6 +404,13 @@ class ClusterScheduler:
         self._free_token_cache: Optional[Tuple[int, Tuple]] = None
         self._dirty = True                # oracle-mode recompute flag
         self._last_t = 0.0
+        # incremental-drive state (the fleet layer's pod protocol): begin()
+        # arms the loop, feed()/advance_to() drive it, finish() closes it.
+        # run() is a thin wrapper, bit-identical to the historical one-shot.
+        self._began = False
+        self._evq: Optional[EventQueue] = None
+        self._driven = False              # fleet-driven: epochs never die
+        self.draining = False             # router hint; set by drain()
         self.metrics = ClusterMetrics(policy=policy.name,
                                       rescore_mode=rescore)
 
@@ -976,24 +993,24 @@ class ClusterScheduler:
             still.append((spec, enq))
         self._waiting = still
 
-    # -- main loop ---------------------------------------------------------
-    def run(self, trace: Sequence[TenantSpec],
-            trace_name: str = "",
-            failures: Sequence[Tuple[float, Sequence[int]]] = ()
-            ) -> ClusterMetrics:
-        """Replay ``trace`` (plus optional ``failures``: ``(time_s, dead
-        core ids)`` pairs) to completion and return the metrics.
+    # -- incremental drive (the fleet pod protocol) ------------------------
+    def begin(self, trace_name: str = "", driven: bool = False) -> None:
+        """Arm the event loop for incremental driving.  ``driven=True`` is
+        fleet mode: the epoch chain re-arms even over an empty queue (more
+        arrivals keep coming from the router), so ``advance_to`` must be
+        given explicit barrier times.
 
-        One-shot: the policy's placement state survives a run, so reuse
-        would mix tenants across traces — build a fresh scheduler+policy
-        per run (as :func:`compare_policies` does).
-        """
-        if self._residents or self._waiting or self._last_t > 0.0:
+        One-shot like :meth:`run`: the policy's placement state survives,
+        so reuse would mix tenants across traces."""
+        if self._began or self._residents or self._waiting \
+                or self._last_t > 0.0:
             raise RuntimeError(
-                "ClusterScheduler.run() is one-shot: the policy's placement "
+                "ClusterScheduler is one-shot: the policy's placement "
                 "state survives a run, so reuse would mix tenants across "
                 "traces — build a fresh scheduler+policy per run (as "
                 "compare_policies does)")
+        self._began = True
+        self._driven = driven
         self.metrics = ClusterMetrics(policy=self.policy.name,
                                       trace=trace_name,
                                       rescore_mode=self.rescore_mode)
@@ -1001,15 +1018,78 @@ class ClusterScheduler:
             # completions stream straight into the run's metrics the
             # moment they finalize (exact counters + percentile sketches)
             self.plane.sink = self.metrics.observe_request
-        evq = EventQueue()
-        for spec in trace:
-            evq.push(spec.arrival_s, ARRIVAL, spec=spec)
-        for fail_t, dead in failures:
-            evq.push(fail_t, FAILURE, cores=tuple(dead))
+        self._evq = EventQueue()
         if self.epoch_s > 0:
-            evq.push(self.epoch_s, EPOCH)
+            self._evq.push(self.epoch_s, EPOCH)
 
-        while evq:
+    def feed(self, specs: Sequence[TenantSpec]) -> None:
+        """Queue tenant arrivals (any time, including before ``_last_t`` —
+        a migrant whose checkpoint-transfer completed mid-window is
+        processed deterministically at its own timestamp)."""
+        for spec in specs:
+            self._evq.push(spec.arrival_s, ARRIVAL, spec=spec)
+
+    def inject_failures(
+            self, failures: Sequence[Tuple[float, Sequence[int]]]) -> None:
+        """Queue ``(time_s, dead core ids)`` FAILURE events."""
+        for fail_t, dead in failures:
+            self._evq.push(fail_t, FAILURE, cores=tuple(dead))
+
+    def resident_specs(self) -> Dict[int, TenantSpec]:
+        """Current residents' specs (router-facing snapshot input)."""
+        return {tid: rt.spec for tid, rt in self._residents.items()}
+
+    def drain(self) -> None:
+        """Mark the pod as draining (rolling upgrade / decommission): a
+        router hint — the loop itself keeps processing whatever is already
+        queued; pair with :meth:`evacuate` to hand residents back."""
+        self.draining = True
+
+    def undrain(self) -> None:
+        """Return the pod to service after a completed drain."""
+        self.draining = False
+
+    def evacuate(self, now: Optional[float] = None) -> List[TenantSpec]:
+        """Hand every resident and queued tenant back to the caller (the
+        fleet router) as re-admittable specs, releasing their placements.
+
+        Residents return with ``duration_s`` clamped to their remaining
+        service time (their serving folds are booked here, like a
+        departure); queued tenants return verbatim — their SLA clock keeps
+        running from the original arrival.  Deterministic order (residents
+        by tid, then the queue in its drain order).  The stale DEPARTURE
+        events left in the queue are tolerated by the loop."""
+        now = self._last_t if now is None else now
+        out: List[TenantSpec] = []
+        for tid in sorted(self._residents):
+            rt = self._residents.pop(tid)
+            if self.plane is not None and self.plane.is_attached(tid):
+                self._fold_records(self.plane.detach(tid))
+                self._resize_state.pop(tid, None)
+                self._phase_cache.clear()
+            self.policy.release(rt.placement)
+            self._tenant_departed(tid)
+            self.metrics.tenant_iterations[tid] = rt.served_iterations
+            self.metrics.tenant_active_s[tid] = max(now - rt.admit_s, 0.0)
+            self.metrics.n_evacuated += 1
+            remaining = max(rt.depart_s - now, 0.0)
+            out.append(dataclasses.replace(rt.spec, arrival_s=now,
+                                           duration_s=remaining))
+        for spec, _enq in self._waiting:
+            out.append(spec)
+        self._waiting = []
+        return out
+
+    def advance_to(self, t: Optional[float] = None) -> None:
+        """Process every queued event with ``time <= t`` (all of them when
+        ``t`` is None — the classic run-to-completion), then integrate
+        utilization and the serving plane up to ``t`` exactly, so a
+        barrier snapshot reflects the barrier instant."""
+        if t is None and self._driven:
+            raise ValueError("driven mode needs explicit barrier times "
+                             "(the epoch chain re-arms forever)")
+        evq = self._evq
+        while evq and (t is None or evq.peek().time <= t):
             ev = evq.pop()
             now = ev.time
             self.metrics.n_events += 1
@@ -1074,10 +1154,18 @@ class ClusterScheduler:
                     agg_fps=sum(self._fps(t) for t in self._residents)))
                 if self.plane is not None:
                     self._check_pressure(now, evq)
-                # re-arm while the system still has work in flight
-                if evq:
+                # re-arm while the system still has work in flight (in
+                # driven mode always: the router keeps feeding arrivals)
+                if evq or self._driven:
                     evq.push(now + self.epoch_s, EPOCH)
+        if t is not None and t > self._last_t:
+            # integrate to the barrier instant so the snapshot the router
+            # reads (utilization, queue depths, serving pressure) is at t
+            self._advance(t)
 
+    def finish(self) -> ClusterMetrics:
+        """Close the run: censor leftover queued tenants as rejected, stamp
+        the horizon, collect engine/ledger telemetry."""
         # tenants still waiting when the trace ends count as rejected;
         # censor their wait at what they actually endured (or their SLA)
         for spec, enq in self._waiting:
@@ -1093,6 +1181,27 @@ class ClusterScheduler:
         if self.ledger is not None:
             self.metrics.ledger_counters = self.ledger.counters.as_dict()
         return self.metrics
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, trace: Sequence[TenantSpec],
+            trace_name: str = "",
+            failures: Sequence[Tuple[float, Sequence[int]]] = ()
+            ) -> ClusterMetrics:
+        """Replay ``trace`` (plus optional ``failures``: ``(time_s, dead
+        core ids)`` pairs) to completion and return the metrics.
+
+        One-shot: the policy's placement state survives a run, so reuse
+        would mix tenants across traces — build a fresh scheduler+policy
+        per run (as :func:`compare_policies` does).  Composed from the
+        incremental-drive protocol (begin / feed / advance_to / finish)
+        with a single run-to-completion advance — event order, and so the
+        whole trajectory, is identical to the historical one-shot loop.
+        """
+        self.begin(trace_name=trace_name)
+        self.feed(trace)
+        self.inject_failures(failures)
+        self.advance_to(None)
+        return self.finish()
 
 
 def compare_policies(policies: Sequence[PlacementPolicy],

@@ -176,12 +176,26 @@ class VNPUPolicy(PlacementPolicy):
     def __init__(self, topo: Topology, hbm_bytes: int = 1 << 36,
                  hypervisor: Optional[Hypervisor] = None,
                  require_connected: bool = False,
-                 mapper: Optional[str] = None):
+                 mapper: Optional[str] = None,
+                 heat_aware: bool = False):
         super().__init__(topo)
         self.hyp = hypervisor or Hypervisor(topo, hbm_bytes=hbm_bytes)
         self.require_connected = require_connected
         self.mapper = mapper
+        # link-heatmap-aware admission (opt in): the scheduler binds the
+        # InterferenceLedger so equal-TED placements prefer cold-boundary
+        # regions; with the flag off nothing is bound and placement is
+        # bit-identical to the historical behavior
+        self.heat_aware = heat_aware
         self._shape_keys: Dict[int, Tuple] = {}   # n_cores -> canonical key
+
+    def bind_link_heat(self, ledger) -> None:
+        """Feed the MappingEngine live per-directed-link occupancy (called
+        by the scheduler when ``heat_aware`` is set and a ledger exists).
+        The engine snapshots the dict per ``map_request``; the ledger
+        mutates it in place, so a bound method closing over the ledger
+        stays current with zero copying."""
+        self.hyp.engine.heat_fn = lambda: ledger.link_loads
 
     def _request(self, spec: TenantSpec, strict: bool) -> VNPURequest:
         """Translate a tenant spec into the hypervisor's request form (the

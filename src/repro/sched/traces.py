@@ -266,6 +266,17 @@ TRACES: Dict[str, TraceConfig] = {
     "pod-serving": TraceConfig(name="pod-serving", catalog=SERVING_CATALOG,
                                rate_per_s=6.4, service_mean_s=35.0,
                                horizon_s=300.0, intended_mesh="32x32"),
+    # The fleet arrival stream: one global serving-mix Poisson process the
+    # FleetRouter splits across pods.  The registered rate is tuned for
+    # 8 x 16x16 pods at the pod-serving overload density (1.6/s per 256
+    # cores); ``repro.fleet.fleet_trace`` rescales it for other fleet
+    # sizes.  benchmarks/fleet_sim.py --gate drives >= 10M aggregate
+    # requests through it with the request streams scaled up.
+    "fleet-serving": TraceConfig(name="fleet-serving",
+                                 catalog=SERVING_CATALOG,
+                                 rate_per_s=12.8, service_mean_s=35.0,
+                                 horizon_s=300.0,
+                                 intended_mesh="8x(16x16)"),
 }
 
 

@@ -305,14 +305,23 @@ class TenantServer:
         if t1 <= t + _EPS:
             self.t = max(self.t, t1)
             return
-        max_iters = 1000 + 50 * len(self._stream)
-        iters = 0
+        # convergence guard: count consecutive iterations with NO time
+        # progress (a real livelock), not total iterations — an arena
+        # near capacity can admit->prefill->preempt the same short
+        # request thousands of times per window, and every such cycle
+        # still advances t by the prefill pass
+        max_stall = 1000 + 50 * len(self._stream)
+        stall = 0
+        t_prev = -math.inf
         while t < t1 - _EPS:
-            iters += 1
-            if iters > max_iters:
-                raise RuntimeError(
-                    f"TenantServer {self.tid}: micro loop did not converge "
-                    f"(t={t}, window=({t0}, {t1}))")
+            if t > t_prev:
+                stall, t_prev = 0, t
+            else:
+                stall += 1
+                if stall > max_stall:
+                    raise RuntimeError(
+                        f"TenantServer {self.tid}: micro loop did not "
+                        f"converge (t={t}, window=({t0}, {t1}))")
             self._ingest(t)
             # start a prefill pass when slots and requests are available
             if self.prefill is None:
@@ -533,6 +542,7 @@ class _VectorPool:
         grow1("n_pend", np.int64, 0)
         grow1("iter_ct", np.int64, 0)
         grow1("max_iter", np.int64, 0)
+        grow1("last_t", np.float64, -np.inf)
         grow1("has_pref", np.bool_, False)
         grow2("ctx", np.float64)
         grow2("prod", np.float64)
@@ -785,13 +795,20 @@ class _VectorPool:
             self.freq[r] = pm.freq_hz
             self.iter_ct[r] = 0
             self.max_iter[r] = 1000 + 50 * len(row.stream)
+            self.last_t[r] = -np.inf
             idx_list.append(r)
         idx = np.array(idx_list, dtype=np.int64)
         cols = np.arange(B)
 
         act = idx[self.t_cur[idx] < t1 - _EPS]
         while act.size:
-            self.iter_ct[act] += 1
+            # convergence guard: consecutive NO-progress iterations only
+            # (matches the scalar engine) — admit->preempt thrash near
+            # arena capacity runs many micro iterations per window while
+            # still advancing every row's clock
+            moved = self.t_cur[act] > self.last_t[act]
+            self.iter_ct[act] = np.where(moved, 0, self.iter_ct[act] + 1)
+            self.last_t[act] = self.t_cur[act]
             if np.any(self.iter_ct[act] > self.max_iter[act]):
                 bad = act[self.iter_ct[act] > self.max_iter[act]][0]
                 tid = self._by_index[int(bad)].tid

@@ -18,8 +18,9 @@ latency lists (the O(requests) memory the PR-6 audit removes), so
 """
 from __future__ import annotations
 
+import bisect
 import math
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -110,7 +111,8 @@ class LatencyStats:
     #: raw-buffer size below which percentiles stay exact
     CUTOVER = 64
 
-    __slots__ = ("count", "total", "vmin", "vmax", "_buf", "_sketches")
+    __slots__ = ("count", "total", "vmin", "vmax", "_buf", "_sketches",
+                 "_cdf")
 
     def __init__(self):
         self.count = 0
@@ -119,8 +121,13 @@ class LatencyStats:
         self.vmax = -math.inf
         self._buf: Optional[List[float]] = []
         self._sketches: Optional[List[P2Quantile]] = None
+        # merged-mode state (see ``merge``): [(count_i, cdf points_i)]
+        self._cdf: Optional[List[Tuple[int, List[Tuple[float, float]]]]] \
+            = None
 
     def add(self, x: float) -> None:
+        if self._cdf is not None:
+            raise RuntimeError("a merged LatencyStats is read-only")
         x = float(x)
         self.count += 1
         self.total += x
@@ -147,9 +154,12 @@ class LatencyStats:
 
     def percentile(self, q: float) -> float:
         """q-th percentile (q in [0, 100]).  Any q while the raw buffer is
-        live; only 100*TRACKED_QUANTILES once sketching started."""
+        live; only 100*TRACKED_QUANTILES once sketching started; any q
+        again on a merged instance (CDF inversion)."""
         if self.count == 0:
             return 0.0
+        if self._cdf is not None:
+            return self._merged_percentile(q)
         if self._sketches is None:
             return float(np.percentile(np.array(self._buf), q))
         for p, sk in zip(TRACKED_QUANTILES, self._sketches):
@@ -158,3 +168,92 @@ class LatencyStats:
         raise ValueError(
             f"percentile {q} not tracked once sketching starts "
             f"(have {[p * 100 for p in TRACKED_QUANTILES]})")
+
+    # -- fleet merge -------------------------------------------------------
+    def _cdf_points(self) -> List[Tuple[float, float]]:
+        """This series' empirical CDF as (value, fraction<=value) knots —
+        exact from a live buffer; from the union of all tracked P² marker
+        sets (heights at their maintained positions) once sketched."""
+        if self._sketches is None:
+            b = sorted(self._buf)
+            n = len(b)
+            return [(v, (i + 1) / n) for i, v in enumerate(b)]
+        pts: List[Tuple[float, float]] = []
+        for sk in self._sketches:
+            denom = max(sk.count - 1, 1)
+            pts.extend((h, min(max(pos / denom, 0.0), 1.0))
+                       for h, pos in zip(sk._q, sk._n))
+        pts.sort()
+        out: List[Tuple[float, float]] = []
+        frac = 0.0
+        for h, fr in pts:               # enforce a monotone CDF
+            frac = max(frac, fr)
+            out.append((h, frac))
+        return out
+
+    @staticmethod
+    def _cdf_at(points: List[Tuple[float, float]], x: float) -> float:
+        """Piecewise-linear CDF through ``points`` evaluated at ``x``."""
+        if x < points[0][0]:
+            return 0.0
+        if x >= points[-1][0]:
+            return 1.0
+        heights = [p[0] for p in points]
+        i = bisect.bisect_right(heights, x)
+        x0, f0 = points[i - 1]
+        x1, f1 = points[i]
+        if x1 <= x0:
+            return f1
+        return f0 + (f1 - f0) * (x - x0) / (x1 - x0)
+
+    def _merged_percentile(self, q: float) -> float:
+        """Invert the count-weighted mixture CDF by bisection (64
+        iterations over [vmin, vmax] — deterministic float arithmetic,
+        independent of merge input order)."""
+        target = min(max(q / 100.0, 0.0), 1.0)
+        if target <= 0.0:
+            return self.vmin
+        if target >= 1.0:
+            return self.vmax
+        lo, hi = self.vmin, self.vmax
+        for _ in range(64):
+            mid = 0.5 * (lo + hi)
+            f = sum(n * self._cdf_at(pts, mid) for n, pts in self._cdf) \
+                / self.count
+            if f < target:
+                lo = mid
+            else:
+                hi = mid
+        return 0.5 * (lo + hi)
+
+    @classmethod
+    def merge(cls, parts: Sequence["LatencyStats"]) -> "LatencyStats":
+        """Combine per-pod series into one fleet-level summary.
+
+        Exact counters (count/total/min/max) always combine exactly.  When
+        every part still holds its raw buffer, the buffers are replayed in
+        the given (pod-id) order — below ``CUTOVER`` total that stays
+        numpy-exact, beyond it the result is the same sketch one stream
+        observing the pods in that order would build.  Once any part has
+        switched to sketching, the merge keeps each part's piecewise-linear
+        CDF (from its marker sets) and answers percentiles by inverting
+        the count-weighted mixture — O(pods) memory, deterministic for a
+        fixed part order, and exact in the limit of exact parts.  Merged
+        instances are read-only (``add`` raises).
+        """
+        out = cls()
+        live = [p for p in parts if p.count]
+        if not live:
+            return out
+        if all(p._sketches is None for p in live):
+            for p in live:
+                for v in p._buf:
+                    out.add(v)
+            return out
+        out.count = sum(p.count for p in live)
+        out.total = sum(p.total for p in live)
+        out.vmin = min(p.vmin for p in live)
+        out.vmax = max(p.vmax for p in live)
+        out._buf = None
+        out._cdf = [(p.count, p._cdf_points()) for p in live]
+        return out

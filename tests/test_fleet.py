@@ -1,0 +1,343 @@
+"""Fleet federation layer: the inter-pod switch, the deterministic global
+router, pod seed derivation, evacuation semantics, latency-sketch merging,
+serial-vs-parallel bit-identity, and the link-heat placement tie-break."""
+import dataclasses
+
+import pytest
+
+from repro.core import MappingEngine, mesh_2d
+from repro.fleet import (Fleet, FleetConfig, FleetPodParams, PodSpec,
+                         PodSwitch, PodView, RouterStats, Scenario,
+                         SwitchConfig, derive_pod_seed, fleet_trace,
+                         make_routing_policy)
+from repro.fleet.pod import PodHost
+from repro.sched import ClusterScheduler, TenantSpec, VNPUPolicy
+from repro.serve.stats import LatencyStats
+
+
+def _spec(tid=1, model="resnet18", n_cores=4, arrival=0.0, duration=10.0,
+          **kw):
+    return TenantSpec(tid=tid, model=model, n_cores=n_cores,
+                      arrival_s=arrival, duration_s=duration, **kw)
+
+
+def _view(pod_id, healthy=256, resident_cores=0, queued_cores=0,
+          models=None, **kw):
+    return PodView(pod_id=pod_id, total_cores=256, healthy_cores=healthy,
+                   free_cores=healthy - resident_cores,
+                   n_resident=0, n_queued=0,
+                   resident_cores=resident_cores, queued_cores=queued_cores,
+                   utilization=resident_cores / max(healthy, 1),
+                   models=models or {}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# inter-pod switch
+# ---------------------------------------------------------------------------
+
+class TestPodSwitch:
+    CFG = SwitchConfig(latency_s=1e-3, bandwidth_bytes_per_s=1e9,
+                       buffer_bytes=1 << 20)
+
+    def test_single_transfer_latency_plus_serialization(self):
+        sw = PodSwitch(self.CFG)
+        done = sw.transfer(0, 1, 500_000_000, now=2.0)
+        assert done == pytest.approx(2.0 + 1e-3 + 0.5)
+        assert sw.stats.n_transfers == 1
+        assert sw.stats.bytes_total == 500_000_000
+        assert sw.stats.queued_s == 0.0
+
+    def test_same_link_serializes(self):
+        sw = PodSwitch(self.CFG)
+        first = sw.transfer(0, 1, 1_000_000_000, now=0.0)   # 1 s on the wire
+        second = sw.transfer(0, 1, 1_000_000_000, now=0.0)
+        assert first == pytest.approx(1.001)
+        # the second queues behind the first's serialization (not its
+        # latency), then pays its own latency + serialization
+        assert second == pytest.approx(1.0 + 1e-3 + 1.0)
+        assert sw.stats.queued_s == pytest.approx(1.0)
+
+    def test_distinct_links_do_not_serialize(self):
+        sw = PodSwitch(self.CFG)
+        a = sw.transfer(0, 1, 1_000_000_000, now=0.0)
+        b = sw.transfer(1, 0, 1_000_000_000, now=0.0)   # reverse direction
+        c = sw.transfer(0, 2, 1_000_000_000, now=0.0)   # different dst
+        assert a == b == c == pytest.approx(1.001)
+
+    def test_buffer_overflow_counted_not_dropped(self):
+        sw = PodSwitch(self.CFG)
+        for _ in range(4):
+            done = sw.transfer(0, 1, 2 << 20, now=0.0)   # 2 MiB vs 1 MiB buf
+        assert sw.stats.buffer_overflows >= 2
+        assert sw.stats.n_transfers == 4          # lossless: all complete
+        assert done > 0.0
+        assert sw.stats.max_backlog_bytes >= 4 * (2 << 20)
+
+    def test_backlog_drains_at_bandwidth(self):
+        sw = PodSwitch(self.CFG)
+        sw.transfer(0, 1, 2 << 20, now=0.0)
+        # ~2 MiB takes ~2.1 ms at 1 GB/s; after 10 ms the backlog is gone
+        sw.transfer(0, 1, 2 << 20, now=10.0)
+        assert sw.stats.buffer_overflows == 0
+
+
+# ---------------------------------------------------------------------------
+# routing policies + router
+# ---------------------------------------------------------------------------
+
+class TestRoutingPolicies:
+    def test_least_loaded_picks_lowest_pressure_tie_by_pod_id(self):
+        pol = make_routing_policy("least-loaded")
+        views = [_view(0, resident_cores=64), _view(1, resident_cores=32),
+                 _view(2, resident_cores=32)]
+        assert pol.choose(_spec(), views, {}) == 1   # tie 1 vs 2 -> lower id
+
+    def test_committed_cores_spread_a_burst(self):
+        pol = make_routing_policy("least-loaded")
+        views = [_view(0), _view(1)]
+        assert pol.choose(_spec(), views, {}) == 0
+        # after committing a big ask to pod 0, the next choice moves on
+        assert pol.choose(_spec(), views, {0: 128}) == 1
+
+    def test_draining_and_failed_pods_ineligible(self):
+        pol = make_routing_policy("least-loaded")
+        views = [_view(0, draining=True), _view(1, failed=True), _view(2)]
+        assert pol.choose(_spec(), views, {}) == 2
+
+    def test_unroutable_when_ask_exceeds_every_healthy_pod(self):
+        pol = make_routing_policy("least-loaded")
+        views = [_view(0, healthy=8), _view(1, healthy=8)]
+        assert pol.choose(_spec(n_cores=16), views, {}) is None
+
+    def test_affinity_prefers_warm_pod_until_overloaded(self):
+        pol = make_routing_policy("affinity")
+        views = [_view(0), _view(1, resident_cores=64,
+                                 models={"resnet18": 2})]
+        assert pol.choose(_spec(model="resnet18"), views, {}) == 1
+        # a cold model falls back to least-loaded
+        assert pol.choose(_spec(model="gpt2_small"), views, {}) == 0
+        # overload cap: the warm pod past the cap stops attracting
+        hot = [_view(0), _view(1, resident_cores=255 + 256,
+                               models={"resnet18": 9})]
+        assert pol.choose(_spec(model="resnet18"), hot, {}) == 0
+
+    def test_round_robin_rotates_over_eligible(self):
+        pol = make_routing_policy("round-robin")
+        views = [_view(0), _view(1, draining=True), _view(2)]
+        got = [pol.choose(_spec(), views, {}) for _ in range(4)]
+        assert got == [0, 2, 0, 2]
+
+    def test_make_routing_policy_unknown_raises(self):
+        with pytest.raises(KeyError):
+            make_routing_policy("nope")
+
+    def test_router_stats_and_commit_tracking(self):
+        from repro.fleet import FleetRouter
+        router = FleetRouter(make_routing_policy("least-loaded"))
+        views = [_view(0), _view(1)]
+        router.new_window()
+        a = router.route(_spec(tid=1, n_cores=128), views)
+        b = router.route(_spec(tid=2, n_cores=4), views)
+        assert (a, b) == (0, 1)                  # commitment pushed tid 2 off
+        assert router.route(_spec(tid=3, n_cores=512), views) is None
+        d = router.stats.as_dict()
+        assert d["routed"] == 2 and d["unroutable"] == 1
+        assert d["routed_by_pod"] == {"0": 1, "1": 1}
+        router.new_window()                      # commitments reset
+        assert router.route(_spec(tid=4), views) == 0
+
+
+# ---------------------------------------------------------------------------
+# pod seeds + evacuation semantics
+# ---------------------------------------------------------------------------
+
+class TestPodSeedsAndEvacuation:
+    def test_derived_seeds_deterministic_and_decorrelated(self):
+        seeds = [derive_pod_seed(42, pid) for pid in range(16)]
+        assert seeds == [derive_pod_seed(42, pid) for pid in range(16)]
+        assert len(set(seeds)) == 16
+        assert seeds != [42 + pid for pid in range(16)]
+        assert derive_pod_seed(43, 0) != derive_pod_seed(42, 0)
+
+    def test_evacuate_restamps_residents_keeps_queued_verbatim(self):
+        host = PodHost(PodSpec(pod_id=0, rows=4, cols=4),
+                       FleetPodParams(serving=False))
+        resident = _spec(tid=1, n_cores=4, arrival=0.0, duration=50.0)
+        # asks for the whole mesh while tid 1 holds cores -> stays queued
+        queued = _spec(tid=2, n_cores=16, arrival=0.0, duration=5.0,
+                       sla_wait_s=1e9)
+        host.feed([resident, queued])
+        host.advance_to(10.0)
+        host.drain()
+        res, que = host.evacuate(10.0)
+        assert [s.tid for s in res] == [1]
+        assert res[0].arrival_s == 10.0
+        assert res[0].duration_s == pytest.approx(40.0)
+        assert que == [queued]                   # verbatim, SLA clock runs
+        assert host.snapshot().n_resident == 0
+
+    def test_fleet_trace_scales_rate_with_pod_count(self):
+        small = fleet_trace(2, seed=0, horizon_s=50.0)
+        big = fleet_trace(8, seed=0, horizon_s=50.0)
+        assert len(big) > 2 * len(small)
+        assert all(0 <= s.arrival_s < 50.0 for s in big)
+
+
+# ---------------------------------------------------------------------------
+# latency-sketch merging
+# ---------------------------------------------------------------------------
+
+class TestLatencyStatsMerge:
+    def test_exact_merge_replays_buffers(self):
+        import numpy as np
+        a, b = LatencyStats(), LatencyStats()
+        xs, ys = [1.0, 5.0, 3.0], [2.0, 4.0]
+        for x in xs:
+            a.add(x)
+        for y in ys:
+            b.add(y)
+        m = LatencyStats.merge([a, b])
+        assert m.count == 5 and m.total == pytest.approx(15.0)
+        assert m.percentile(50) == pytest.approx(
+            float(np.percentile(xs + ys, 50)))
+
+    def test_sketched_merge_approximates_pooled_percentiles(self):
+        import numpy as np
+        rng = np.random.default_rng(0)
+        parts, pooled = [], []
+        for i in range(4):
+            st = LatencyStats()
+            vals = rng.gamma(2.0, 0.5, size=500) + i * 0.1
+            for v in vals:
+                st.add(float(v))
+            pooled.extend(float(v) for v in vals)
+            parts.append(st)
+        m = LatencyStats.merge(parts)
+        assert m.count == 2000
+        for q in (50, 95, 99):
+            exact = float(np.percentile(pooled, q))
+            got = m.percentile(q)
+            assert abs(got - exact) <= max(0.15 * exact, 0.05), (q, got,
+                                                                 exact)
+        # merged percentiles are independent of part order
+        rev = LatencyStats.merge(list(reversed(parts)))
+        assert rev.percentile(95) == pytest.approx(m.percentile(95))
+
+    def test_merged_is_read_only_and_empty_parts_drop(self):
+        a = LatencyStats()
+        for v in range(100):
+            a.add(float(v))
+        m = LatencyStats.merge([LatencyStats(), a])
+        assert m.count == 100
+        with pytest.raises(RuntimeError):
+            m.add(1.0)
+        empty = LatencyStats.merge([])
+        assert empty.count == 0 and empty.percentile(50) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serial vs parallel bit-identity (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+class TestFleetBitIdentity:
+    def _run(self, workers):
+        pods = [PodSpec(pod_id=0, rows=8, cols=8),
+                PodSpec(pod_id=1, rows=8, cols=8,
+                        mem_interface_cols=(0, 7))]
+        cfg = FleetConfig(seed=11, window_s=2.0, record_requests=True)
+        fleet = Fleet(pods, cfg)
+        trace = fleet_trace(2, seed=11, horizon_s=8.0)
+        scenarios = [Scenario("upgrade", t_s=4.0, pod_id=1, duration_s=4.0)]
+        return fleet.run(trace, scenarios=scenarios, workers=workers,
+                         end_s=24.0)
+
+    def test_parallel_matches_serial_bit_for_bit(self):
+        serial = self._run(1)
+        par = self._run(2)
+        assert par.workers == 2
+        assert serial.pod_digests() == par.pod_digests()
+        assert serial.serving_summary() == par.serving_summary()
+        assert serial.requests_arrived > 0
+        assert serial.router.routed > 0
+
+    def test_pod_failure_evacuates_through_router(self):
+        pods = [PodSpec(pod_id=0, rows=8, cols=8),
+                PodSpec(pod_id=1, rows=8, cols=8)]
+        fleet = Fleet(pods, FleetConfig(seed=3, window_s=2.0))
+        trace = fleet_trace(2, seed=3, horizon_s=6.0)
+        m = fleet.run(trace, scenarios=[Scenario("pod-failure", t_s=4.0,
+                                                 pod_id=0)],
+                      workers=1, end_s=20.0)
+        s = m.serving_summary()
+        assert s["evacuated"] > 0
+        assert s["router"]["migrations"] > 0
+        # everything after the failure lands on the surviving pod
+        assert m.pods[0].n_events > 0
+        assert s["switch"]["n_transfers"] == s["router"]["migrations"] \
+            or s["switch"]["n_transfers"] <= s["router"]["migrations"]
+
+    def test_duplicate_pod_ids_rejected(self):
+        with pytest.raises(ValueError):
+            Fleet([PodSpec(pod_id=0), PodSpec(pod_id=0)])
+
+    def test_unknown_scenario_kind_rejected(self):
+        fleet = Fleet([PodSpec(pod_id=0, rows=4, cols=4)])
+        with pytest.raises(ValueError):
+            fleet.run([], scenarios=[Scenario("reboot", 1.0, 0)])
+
+
+# ---------------------------------------------------------------------------
+# link-heat-aware admission (satellite: cold-boundary tie-break)
+# ---------------------------------------------------------------------------
+
+class TestHeatAwarePlacement:
+    def test_heat_fn_none_is_the_default_path(self):
+        eng = MappingEngine(mesh_2d(6, 6))
+        assert eng.heat_fn is None
+        base = eng.map_request(mesh_2d(2, 2, base_id=100))
+        assert base is not None and base.ted == 0.0
+
+    def test_hot_boundary_steers_equal_ted_choice(self):
+        """Two equal-TED free regions (a wall splits the mesh): the engine
+        prefers the one whose boundary links are cold."""
+        req = mesh_2d(2, 2, base_id=100)
+        wall = {n for n in range(36) if n % 6 in (2, 3)}   # cols 2-3 of 6x6
+
+        cold_eng = MappingEngine(mesh_2d(6, 6))
+        cold_eng.notify_allocate(wall)
+        baseline = cold_eng.map_request(req)
+        assert baseline.ted == 0.0
+
+        hot_eng = MappingEngine(mesh_2d(6, 6))
+        hot_eng.notify_allocate(wall)
+        # roast every directed link crossing the baseline choice's boundary
+        loads = {}
+        for n in baseline.nodes:
+            for m in hot_eng.adj[n]:
+                if m not in baseline.nodes:
+                    loads[(n, m)] = 100.0
+                    loads[(m, n)] = 100.0
+        hot_eng.heat_fn = lambda: loads
+        steered = hot_eng.map_request(req)
+        assert steered is not None and steered.ted == 0.0
+        assert set(steered.nodes) != set(baseline.nodes)
+        assert hot_eng._boundary_heat(steered.nodes, loads) \
+            < hot_eng._boundary_heat(baseline.nodes, loads)
+        # the two choices live in the two disjoint halves of the mesh
+        assert set(steered.nodes).isdisjoint(set(baseline.nodes))
+
+    def test_vnpu_policy_binds_ledger_heat(self):
+        policy = VNPUPolicy(mesh_2d(6, 6), heat_aware=True)
+        assert policy.heat_aware
+        sched = ClusterScheduler(policy, rescore="ledger")
+        assert policy.hyp.engine.heat_fn is not None
+        sched.begin(driven=True)
+        sched.feed([_spec(tid=1, n_cores=4, duration=20.0)])
+        sched.advance_to(5.0)
+        assert policy.hyp.engine.heat_fn() is not None
+        sched.finish()
+
+    def test_heat_off_policy_has_no_heat_fn(self):
+        policy = VNPUPolicy(mesh_2d(6, 6))
+        ClusterScheduler(policy, rescore="ledger")
+        assert policy.hyp.engine.heat_fn is None

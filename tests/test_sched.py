@@ -206,6 +206,65 @@ class TestEventsAndTraces:
         got = [(e.kind, e.tid) for e in q.drain()]
         assert got == [(DEPARTURE, 2), (ARRIVAL, 1)]
 
+    def test_equal_timestamp_kind_priority_total_order(self):
+        """At one instant: departure < failure < epoch < arrival < resize,
+        whatever order they were pushed in — the scheduler's same-tick
+        semantics (free cores, quarantine, observe, admit, grow) depend
+        on exactly this order."""
+        from repro.sched.events import EPOCH, FAILURE, RESIZE
+        q = EventQueue()
+        for kind in (RESIZE, ARRIVAL, EPOCH, FAILURE, DEPARTURE):
+            q.push(3.0, kind, tid=1)
+        got = [e.kind for e in q.drain()]
+        assert got == [DEPARTURE, FAILURE, EPOCH, ARRIVAL, RESIZE]
+
+    def test_equal_time_and_kind_preserves_insertion_order(self):
+        """Ties within one (time, kind) bucket break by insertion seq —
+        the heap is fully deterministic, never Python-object-id ordered."""
+        q = EventQueue()
+        for tid in (7, 3, 9, 1):
+            q.push(2.0, ARRIVAL, tid=tid)
+        assert [e.tid for e in q.drain()] == [7, 3, 9, 1]
+
+    def test_interleaved_pushes_replay_identically(self):
+        """Two queues fed the same push/pop script emit the same event
+        stream (heap order is a pure function of the script, not of heap
+        internals), and a full drain honors (time, kind, insertion)."""
+        from repro.sched.events import EPOCH, FAILURE, RESIZE
+        script = [(5.0, ARRIVAL, 1), (5.0, RESIZE, 2), (1.0, EPOCH, 3),
+                  (5.0, DEPARTURE, 4), (1.0, ARRIVAL, 5), (0.5, FAILURE, 6),
+                  (5.0, FAILURE, 7), (1.0, DEPARTURE, 8)]
+
+        def run():
+            q = EventQueue()
+            out = []
+            for i, (t, kind, tid) in enumerate(script):
+                q.push(t, kind, tid=tid)
+                if i % 3 == 2:
+                    e = q.pop()
+                    out.append((e.time, e.kind, e.tid))
+            out.extend((e.time, e.kind, e.tid) for e in q.drain())
+            return out
+
+        assert run() == run()
+        full = EventQueue()
+        for t, kind, tid in script:
+            full.push(t, kind, tid=tid)
+        got = [(e.time, e.kind, e.tid) for e in full.drain()]
+        assert got == [(0.5, FAILURE, 6), (1.0, DEPARTURE, 8),
+                       (1.0, EPOCH, 3), (1.0, ARRIVAL, 5),
+                       (5.0, DEPARTURE, 4), (5.0, FAILURE, 7),
+                       (5.0, ARRIVAL, 1), (5.0, RESIZE, 2)]
+
+    def test_peek_matches_pop(self):
+        q = EventQueue()
+        q.push(2.0, ARRIVAL, tid=1)
+        q.push(2.0, DEPARTURE, tid=2)
+        p = q.peek()
+        assert (p.kind, p.tid) == (DEPARTURE, 2)
+        assert q.pop() is p
+        assert len(q) == 1 and bool(q)
+
     def test_poisson_trace_deterministic_and_in_horizon(self):
         cfg = TraceConfig(seed=42, horizon_s=50.0)
         a = poisson_trace(cfg)
