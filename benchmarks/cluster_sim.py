@@ -56,6 +56,7 @@ from repro.core import mesh_2d                       # noqa: E402
 from repro.core import simulator as S                # noqa: E402
 from repro.sched import (ClusterScheduler, TRACES, make_policy,  # noqa: E402
                          make_trace)
+from repro.sched.defrag import DEFRAG_PLANNERS       # noqa: E402
 
 GATE_MESH = (16, 16)
 GATE_SPEEDUP = 5.0        # ledger vs oracle median epoch-scoring pass cost
@@ -347,6 +348,11 @@ def main(argv=None) -> int:
                          "(e.g. 0,0.05,0.1,0.2)")
     ap.add_argument("--no-defrag", action="store_true",
                     help="disable defragmenting migration")
+    ap.add_argument("--defrag-planner", default="greedy",
+                    choices=sorted(DEFRAG_PLANNERS),
+                    help="defrag strategy: greedy most-scattered-first, or "
+                         "ilp = exact minimum-pause migration subsets "
+                         "(MILP; vNPU policy only, falls back to greedy)")
     ap.add_argument("--gate", action="store_true",
                     help="CI mode: fast-path-vs-oracle gate — 16x16 "
                          "mixed/pod-mixed by default, the budgeted "
@@ -419,6 +425,7 @@ def main(argv=None) -> int:
         sched = ClusterScheduler(policy, hw=S.SIM_CONFIG,
                                  epoch_s=args.epoch,
                                  defrag=not args.no_defrag,
+                                 defrag_planner=args.defrag_planner,
                                  rescore=args.rescore)
         t0 = time.perf_counter()
         metrics = sched.run(trace, trace_name=args.trace, failures=failures)

@@ -21,6 +21,16 @@ CI gate (allocation-latency smoke):
     PYTHONPATH=src python benchmarks/mapping_engine.py --gate
 drives the sched ``mixed`` trace through the engine on a 16x16 mesh and
 fails unless the median allocation solve is <= 50 ms/event.
+
+Optimality-gap gate (placement-quality oracle):
+    PYTHONPATH=src python benchmarks/mapping_engine.py --gap-gate
+sweeps seeded free-region/request corpora on 6x6..16x16 meshes, solves
+each scenario with the ``ilp`` mapper (exact MILP, provable-optimality
+flag), and records every heuristic mapper's TED gap — and the end-to-end
+score gap (simulated iteration-interval regression of its placement) —
+against the proven optimum into ``BENCH_cluster_sim.json``.  Fails if any
+mapper beats a proven optimum (soundness), or if bipartite/hybrid exceed
+their pinned max-TED-gap bounds on proven scenarios.
 """
 from __future__ import annotations
 
@@ -42,6 +52,28 @@ from repro.core.topology import mesh_2d               # noqa: E402
 GATE_MEDIAN_S = 0.050     # CI gate: median engine solve on 16x16 mixed trace
 
 REQUEST_SHAPES = ((2, 2), (2, 3), (2, 4), (3, 3), (3, 4), (4, 4))
+
+# ---- optimality-gap gate (--gap-gate) --------------------------------------
+#: (mesh, blocked fractions, request shapes) of the seeded gap corpora.
+#: Small meshes carry the heavily-fragmented (nonzero-TED) scenarios where
+#: the MILP genuinely branches; pod meshes exercise the TED-0 shortcut and
+#: the sub-domain path at scale.
+GAP_CORPORA = (
+    ((6, 6),   (0.15, 0.30, 0.45), ((2, 2), (2, 3), (3, 3), (2, 4), (3, 4))),
+    ((8, 8),   (0.20, 0.40),       ((2, 3), (3, 3), (3, 4), (4, 4))),
+    ((10, 10), (0.20, 0.40),       ((3, 3), (3, 4), (4, 4))),
+    ((12, 12), (0.25,),            ((3, 4), (4, 4))),
+    ((16, 16), (0.25,),            ((4, 4),)),
+)
+#: pinned per-mapper max TED gap vs the proven ILP optimum over the seeded
+#: corpora (seed 0).  Everything is deterministic — the engine, HiGHS, the
+#: corpora — so these are exact claims, not statistical bounds; a regression
+#: in either mapper moves the measured max and fails the gate.
+GAP_GATE_BOUNDS = {"hybrid": 5.0, "bipartite": 12.0}
+#: heuristic mappers measured against the oracle (rect/partition are
+#: recorded but not gated: they trade quality for speed by design)
+GAP_MAPPERS = ("hybrid", "bipartite", "rect", "partition")
+GAP_WORKLOAD = "bert_base"          # end-to-end score probe workload
 
 
 def _churn_events(rng: np.random.Generator, n_events: int
@@ -231,6 +263,119 @@ def run_gate(median_budget_s: float = GATE_MEDIAN_S) -> dict:
     }
 
 
+def _e2e_interval(topo, result, hw) -> float:
+    """End-to-end score of a placement: simulated iteration interval of the
+    probe workload on the placed cores (cycles; lower is better)."""
+    from repro.core import simulator as S
+    from repro.core.workloads import get_workload
+    rep = S.simulate(get_workload(GAP_WORKLOAD), sorted(result.nodes),
+                     topo, hw)
+    return float(rep.interval_cycles)
+
+
+def run_gap_gate(seed: int, budget_s: float, bench_out: Optional[str]) -> dict:
+    """The optimality-gap harness: seeded corpora, one exact (``ilp``)
+    solve per scenario, per-mapper TED and end-to-end gaps vs the proven
+    optimum.  ``budget_s`` bounds the wall clock — corpora past the budget
+    are dropped *loudly* (reported in the summary), never silently."""
+    from repro.core import simulator as S
+
+    rng = np.random.default_rng(seed)
+    hw = S.SIM_CONFIG
+    t_start = time.perf_counter()
+    rows = []            # BENCH entries: one per (mesh, mapper)
+    violations = []      # mapper beat a proven optimum (soundness failure)
+    dropped = []         # corpora skipped on wall budget
+    scenarios_total = proven_total = 0
+    gaps = {m: [] for m in GAP_MAPPERS}       # proven-scenario TED gaps
+
+    for (r, c), fracs, shapes in GAP_CORPORA:
+        if time.perf_counter() - t_start > budget_s:
+            dropped.append(f"{r}x{c}")
+            continue
+        topo = mesh_2d(r, c)
+        nodes = sorted(topo.node_attrs)
+        per_mapper = {m: {"ted_gaps": [], "e2e_gaps": []}
+                      for m in GAP_MAPPERS}
+        n_scen = n_proven = 0
+        t_mesh = time.perf_counter()
+        for frac in fracs:
+            blocked = set(rng.choice(
+                nodes, size=int(frac * len(nodes)),
+                replace=False).tolist())
+            free = frozenset(nodes) - blocked
+            for shape in shapes:
+                if shape[0] * shape[1] > len(free):
+                    continue
+                req = mesh_2d(*shape, base_id=100_000)
+                ilp_eng = MappingEngine(topo, mapper="ilp")
+                opt = ilp_eng.map_request(req, require_connected=False,
+                                          free_override=free)
+                if opt is None:
+                    continue
+                n_scen += 1
+                if not opt.optimal:
+                    continue           # gap undefined without a certificate
+                n_proven += 1
+                e2e_opt = _e2e_interval(topo, opt, hw)
+                for m in GAP_MAPPERS:
+                    eng = MappingEngine(topo, mapper=m)
+                    got = eng.map_request(req, require_connected=False,
+                                          free_override=free)
+                    if got is None:
+                        continue
+                    gap = got.ted - opt.ted
+                    if gap < -1e-9:
+                        violations.append({
+                            "mesh": f"{r}x{c}", "shape": list(shape),
+                            "mapper": m, "mapper_ted": got.ted,
+                            "ilp_ted": opt.ted})
+                    per_mapper[m]["ted_gaps"].append(gap)
+                    per_mapper[m]["e2e_gaps"].append(
+                        (_e2e_interval(topo, got, hw) - e2e_opt)
+                        / max(e2e_opt, 1e-9))
+        wall = time.perf_counter() - t_mesh
+        scenarios_total += n_scen
+        proven_total += n_proven
+        for m in GAP_MAPPERS:
+            tg, eg = per_mapper[m]["ted_gaps"], per_mapper[m]["e2e_gaps"]
+            gaps[m].extend(tg)
+            rows.append({
+                "trace": "gap-corpus", "mesh": f"{r}x{c}-gap",
+                "mode": f"gap-{m}", "scenarios": n_scen, "proven": n_proven,
+                "max_ted_gap": round(max(tg), 3) if tg else 0.0,
+                "mean_ted_gap": round(float(np.mean(tg)), 3) if tg else 0.0,
+                "max_e2e_gap": round(max(eg), 4) if eg else 0.0,
+                "mean_e2e_gap": round(float(np.mean(eg)), 4) if eg else 0.0,
+                "wall_s": round(wall, 2),
+            })
+
+    bound_checks = {
+        m: {"max_ted_gap": round(max(gaps[m]), 3) if gaps[m] else 0.0,
+            "bound": b,
+            "ok": (max(gaps[m]) if gaps[m] else 0.0) <= b + 1e-9}
+        for m, b in GAP_GATE_BOUNDS.items()}
+    report = {
+        "seed": seed,
+        "scenarios": scenarios_total,
+        "proven": proven_total,
+        "proven_fraction": round(proven_total / max(scenarios_total, 1), 3),
+        "budget_s": budget_s,
+        "dropped_corpora": dropped,
+        "no_mapper_beats_oracle": not violations,
+        "violations": violations,
+        "bounds": bound_checks,
+        "gate_ok": (not violations and proven_total > 0
+                    and all(v["ok"] for v in bound_checks.values())),
+    }
+    if bench_out:
+        sys.path.insert(0, str(Path(__file__).resolve().parent))
+        from cluster_sim import _write_bench
+        _write_bench("gap-gate", report, rows, bench_out)
+    report["entries"] = rows
+    return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--events", type=int, default=160,
@@ -244,8 +389,41 @@ def main(argv=None) -> int:
                     help="also run the 32x32 (1024-core) latency mesh")
     ap.add_argument("--gate", action="store_true",
                     help="CI mode: only the 16x16 mixed-trace latency gate")
+    ap.add_argument("--gap-gate", action="store_true",
+                    help="CI mode: optimality-gap sweep vs the ilp oracle; "
+                         "merges rows into BENCH_cluster_sim.json")
+    ap.add_argument("--gap-budget-s", type=float, default=900.0,
+                    help="wall budget for the --gap-gate sweep; corpora "
+                         "past it are dropped (and reported)")
+    ap.add_argument("--bench-out",
+                    default=str(Path(__file__).resolve().parent.parent
+                                / "BENCH_cluster_sim.json"),
+                    help="BENCH json to merge --gap-gate rows into "
+                         "('' to skip writing)")
     ap.add_argument("--json", action="store_true", help="machine output")
     args = ap.parse_args(argv)
+
+    if args.gap_gate:
+        rep = run_gap_gate(args.seed, args.gap_budget_s, args.bench_out)
+        if args.json:
+            print(json.dumps(rep, indent=2))
+        else:
+            for e in rep["entries"]:
+                print(f"{e['mesh']:>10} {e['mode']:<14} "
+                      f"proven {e['proven']}/{e['scenarios']}  "
+                      f"ted gap max {e['max_ted_gap']} "
+                      f"mean {e['mean_ted_gap']}  "
+                      f"e2e gap max {e['max_e2e_gap']:.2%}")
+            for m, v in rep["bounds"].items():
+                print(f"bound {m}: max {v['max_ted_gap']} <= {v['bound']} "
+                      f"-> {'OK' if v['ok'] else 'FAIL'}")
+            if rep["dropped_corpora"]:
+                print(f"DROPPED on wall budget: {rep['dropped_corpora']}")
+            print(f"gap-gate: {rep['proven']}/{rep['scenarios']} proven, "
+                  f"no_mapper_beats_oracle="
+                  f"{rep['no_mapper_beats_oracle']} -> "
+                  f"{'OK' if rep['gate_ok'] else 'FAIL'}")
+        return 0 if rep["gate_ok"] else 1
 
     if args.gate:
         gate = run_gate()

@@ -11,18 +11,20 @@ and every scheduler policy:
 * :mod:`repro.core.engine.cache`      — content-addressed LRU over
   canonicalized minTopologyEditDistance results;
 * :mod:`repro.core.engine.mappers`    — pluggable speed/accuracy strategies
-  (exact / hybrid / bipartite / rectangle-greedy);
+  (exact / hybrid / bipartite / rectangle-greedy / ilp / partition);
+* :mod:`repro.core.engine.ilp`        — the MILP formulation behind the
+  ``ilp`` placement-quality oracle (HiGHS via scipy);
 * :mod:`repro.core.engine.engine`     — the :class:`MappingEngine` facade.
 """
 from .engine import EngineStats, MappingEngine, match_key
-from .mappers import (BipartiteMapper, ExactMapper, HybridMapper, MAPPERS,
-                      Mapper, RectangleGreedyMapper)
+from .mappers import (BipartiteMapper, ExactMapper, HybridMapper, ILPMapper,
+                      MAPPERS, Mapper, PartitionMapper, RectangleGreedyMapper)
 from .regions import FreeRegions, RegionSignature, component_signature
 from .cache import TEDCache
 
 __all__ = [
     "MappingEngine", "EngineStats", "match_key",
     "Mapper", "MAPPERS", "HybridMapper", "BipartiteMapper", "ExactMapper",
-    "RectangleGreedyMapper",
+    "RectangleGreedyMapper", "ILPMapper", "PartitionMapper",
     "FreeRegions", "RegionSignature", "component_signature", "TEDCache",
 ]

@@ -37,6 +37,10 @@ class CachedMapping:
     exact: bool
     candidates_evaluated: int
     transform: str = "identity"
+    #: the ILP mapper's optimality certificate (see MappingResult.optimal);
+    #: like TED 0, a proven component optimum is a D4-invariant quantity,
+    #: so optimal entries are servable across orientations
+    optimal: bool = False
 
 
 def encode_result(result: MappingResult, region_order: Sequence[int],
@@ -51,7 +55,8 @@ def encode_result(result: MappingResult, region_order: Sequence[int],
                                 for v, p in result.assignment.items())),
         exact=result.exact,
         candidates_evaluated=result.candidates_evaluated,
-        transform=transform)
+        transform=transform,
+        optimal=result.optimal)
 
 
 def decode_result(entry: CachedMapping, region_order: Sequence[int],
@@ -62,7 +67,8 @@ def decode_result(entry: CachedMapping, region_order: Sequence[int],
         assignment={request_order[qi]: region_order[ri]
                     for qi, ri in entry.assign_idx},
         exact=entry.exact,
-        candidates_evaluated=entry.candidates_evaluated)
+        candidates_evaluated=entry.candidates_evaluated,
+        optimal=entry.optimal)
 
 
 def region_part(key: Tuple) -> Hashable:

@@ -231,14 +231,18 @@ class MappingEngine:
             if key is not None:
                 # A cross-orientation entry is only served when provably
                 # orientation-independent: a negative (feasibility is
-                # structural) or a perfect result (TED 0 is a global lower
-                # bound).  Heuristic quality is NOT D4-invariant (first-fit
-                # privileges an orientation; pool scoring does too once
-                # max_candidates truncates), so a suboptimal twin falls
-                # through to the frame-exact key, then to a fresh solve —
-                # a lucky orientation can never poison its rotations.
+                # structural), a perfect result (TED 0 is a global lower
+                # bound), or an ILP-certified component optimum (the
+                # minimum over all placements is a D4-invariant quantity,
+                # and decode preserves validity and cost).  Heuristic
+                # quality is NOT D4-invariant (first-fit privileges an
+                # orientation; pool scoring does too once max_candidates
+                # truncates), so a suboptimal twin falls through to the
+                # frame-exact key, then to a fresh solve — a lucky
+                # orientation can never poison its rotations.
                 found, entry = self.cache.get(key)
                 servable = found and (entry is None or entry.ted == 0.0
+                                      or entry.optimal
                                       or entry.transform == sig.transform)
                 if not servable:
                     # frame-exact fallback: covers both a cross-frame
@@ -269,7 +273,7 @@ class MappingEngine:
                 enc = (None if result is None else
                        encode_result(result, sig.order, req_sig.order,
                                      transform=sig.transform))
-                if enc is None or enc.ted == 0.0:
+                if enc is None or enc.ted == 0.0 or enc.optimal:
                     # serves every orientation — claim the frame-free key
                     self.cache.put(key, enc)
                 else:

@@ -14,6 +14,15 @@ Every :class:`Mapper` turns (request, free component) into the best
   engine default.
 * ``exact``     — branch & bound on *every* candidate (exponential in the
   request size; ground truth for tests and small configs).
+* ``ilp``       — one MILP over the whole free component (HiGHS via
+  :mod:`~repro.core.engine.ilp`): provably minimal TED over *all*
+  injective placements when the component fits the variable budget
+  (``MappingResult.optimal`` is the certificate), a deterministic
+  sub-domain restriction above it.  The placement-quality oracle.
+* ``partition`` — METIS-style recursive bisection: the virtual topology
+  is min-cut bisected while the free tile is geometrically bisected in
+  proportion, then the leaf assignment is 2-opt polished.  No candidate
+  pool at all — the cheapest topology-aware strategy.
 
 Escalation order is ascending bipartite cost with a running global budget,
 with an edge-count lower-bound skip under the default edge-match — most
@@ -55,12 +64,13 @@ class MapContext:
 
 
 def _result_from(ctx: MapContext, cand: Sequence[int], perm: np.ndarray,
-                 ted: float, evaluated: int) -> MappingResult:
+                 ted: float, evaluated: int,
+                 optimal: bool = False) -> MappingResult:
     assignment = {ctx.req.order[i]: int(cand[perm[i]])
                   for i in range(len(ctx.req.order))}
     return MappingResult(nodes=frozenset(int(n) for n in cand), ted=float(ted),
                          assignment=assignment, exact=(ted == 0.0),
-                         candidates_evaluated=evaluated)
+                         candidates_evaluated=evaluated, optimal=optimal)
 
 
 def _bnb(ctx: MapContext, cand: Sequence[int], budget: float
@@ -267,10 +277,284 @@ class RectangleGreedyMapper(Mapper):
                             float(score.costs[0]), 1)
 
 
+class ILPMapper(Mapper):
+    """Placement-quality oracle: one MILP over the free component.
+
+    The TED objective is a quadratic assignment problem; this strategy
+    linearizes it (:func:`repro.core.engine.ilp.solve_placement_milp`) and
+    lets HiGHS prove the minimum over *all* injective placements of the
+    request into the component — not just the truncated candidate pool the
+    heuristic mappers rank.  ``MappingResult.optimal`` certifies it: True
+    only when the MILP domain was the whole component and HiGHS returned
+    status 0 (proven optimal) inside the time limit.
+
+    Components whose MILP would exceed ``var_limit`` variables get a
+    deterministic sub-domain instead — the union of the best
+    bipartite-ranked candidates' nodes — so the strategy stays usable at
+    pod scale, just without the certificate.  A perfect (TED 0) pool hit
+    short-circuits the MILP entirely: zero is a global lower bound, so the
+    certificate is free.
+
+    Determinism: the domain construction is ordered, and HiGHS is
+    deterministic for a fixed model; ``time_budget_s`` only caps runaway
+    solves (a capped solve returns the incumbent un-certified).
+    """
+
+    name = "ilp"
+    time_budget_s: float = 20.0      # HiGHS wall cap per component solve
+    var_limit: int = 9000            # full-component MILP eligibility
+
+    def map_component(self, ctx: MapContext,
+                      comp: FrozenSet[int]) -> Optional[MappingResult]:
+        from . import ilp as _ilp
+
+        k = len(ctx.req.order)
+        if len(comp) < k:
+            return None
+        cands = self._candidates(ctx, comp)
+        if not _ilp.HAVE_MILP:  # pragma: no cover - scipy always ships milp
+            return HybridMapper().map_component(ctx, comp)
+
+        # cheap incumbent (and TED-0 short-circuit) from the pool
+        best_cost = None
+        best_perm = best_nodes = None
+        if cands:
+            score = self._score(ctx, cands)
+            c = int(np.argmin(score.costs))
+            best_cost = float(score.costs[c])
+            best_perm, best_nodes = score.perms[c], cands[c]
+            if best_cost == 0.0:
+                return _result_from(ctx, best_nodes, best_perm, 0.0,
+                                    len(cands), optimal=True)
+
+        domain = self._domain(ctx, comp, cands, k)
+        if domain is None:
+            if best_cost is None:
+                return None
+            return _result_from(ctx, best_nodes, best_perm, best_cost,
+                                len(cands))
+        full = len(domain) == len(comp)
+        idx = np.array([ctx.pool.index[n] for n in domain], dtype=np.int64)
+        sol = _ilp.solve_placement_milp(
+            ctx.req.A, ctx.req.W_miss, self._node_costs(ctx, idx),
+            ctx.pool.adj[np.ix_(idx, idx)], ctx.Wspur[np.ix_(idx, idx)],
+            time_limit=self.time_budget_s)
+        evaluated = len(cands) + 1
+        if sol is None:
+            if best_cost is None:
+                return None
+            return _result_from(ctx, best_nodes, best_perm, best_cost,
+                                evaluated)
+        nodes = tuple(domain[s] for s in sol.slots)
+        # exact edit cost of the MILP assignment through the same batched
+        # arithmetic as every other mapper — solver tolerances never leak
+        cost = self._induced(ctx, nodes)
+        ident = np.arange(k, dtype=np.int64)
+        if sol.proven and full:
+            return _result_from(ctx, nodes, ident, cost, evaluated,
+                                optimal=True)
+        if best_cost is not None and best_cost <= cost:
+            return _result_from(ctx, best_nodes, best_perm, best_cost,
+                                evaluated)
+        return _result_from(ctx, nodes, ident, cost, evaluated)
+
+    # -- helpers ------------------------------------------------------------
+    def _domain(self, ctx: MapContext, comp: FrozenSet[int],
+                cands: List[Tuple[int, ...]], k: int
+                ) -> Optional[Tuple[int, ...]]:
+        """MILP node domain: the whole component when its model fits
+        ``var_limit``, else the union of the best-ranked candidates' nodes
+        (ascending bipartite cost — the order ``self._score`` ranked them
+        in is not retained here, so plain pool order keeps it
+        deterministic) up to the largest m the budget allows."""
+        from . import ilp as _ilp
+
+        nre = ctx.req.n_edges
+        m = len(comp)
+        n_edges = int(ctx.pool.adj[np.ix_(
+            [ctx.pool.index[n] for n in comp],
+            [ctx.pool.index[n] for n in comp])].sum()) // 2
+        if _ilp.placement_milp_size(k, m, nre, n_edges) <= self.var_limit:
+            return tuple(sorted(comp))
+        if not cands:
+            return None
+        # mesh degree <= 4 bounds edges by 2m: m_max from the size formula
+        m_max = max(k, self.var_limit // (k + 2 * nre + 2))
+        domain: List[int] = []
+        seen = set()
+        for cand in cands:
+            new = [n for n in cand if n not in seen]
+            if domain and len(domain) + len(new) > m_max:
+                break
+            domain.extend(new)
+            seen.update(new)
+        return tuple(sorted(domain))
+
+    def _node_costs(self, ctx: MapContext, idx: np.ndarray) -> np.ndarray:
+        """(k x m) node substitution costs req slot x domain node — the
+        rectangular analogue of :func:`batch.node_cost_tensor` (which is
+        square, per-candidate)."""
+        pool, req = ctx.pool, ctx.req
+        base = (req.abbr[:, None] != pool.abbr[idx][None, :]).astype(
+            np.float64) * batch.DEFAULT_NODE_COST
+        if ctx.nm_id == "node:default":
+            return base
+        w = getattr(ctx.nm, "mem_dist_weight", None)
+        if w is not None:
+            return base + float(w) * np.abs(
+                req.mem_dist[:, None] - pool.mem_dist[idx][None, :])
+        node_attrs = pool.topo.node_attrs
+        cattrs = [node_attrs[pool.ids[j]] for j in idx]
+        out = np.empty((len(req.order), len(idx)), dtype=np.float64)
+        for i, ra in enumerate(req.attrs):
+            out[i, :] = [ctx.nm(ra, ca) for ca in cattrs]
+        return out
+
+    def _induced(self, ctx: MapContext, nodes: Sequence[int]) -> float:
+        """Exact induced edit cost of the identity assignment onto
+        ``nodes`` (slot i -> nodes[i])."""
+        score = self._score(ctx, [tuple(nodes)])
+        ident = np.arange(len(nodes), dtype=np.int64)
+        return float(batch.induced_batch(ctx.req.A, ctx.req.W_miss, score.A,
+                                         score.Wsp, score.Cnode,
+                                         ident[None])[0])
+
+
+class PartitionMapper(Mapper):
+    """METIS-style recursive bisection — no candidate pool at all.
+
+    The free component is first trimmed to a compact connected k-node
+    blob (greedy nearest-to-seed growth from a corner node — without this
+    a proportional geometric split of an m >> k component scatters the
+    tile across the whole region).  The request graph is then recursively
+    bisected (by its longer coordinate axis when it has coordinates — the
+    min-cut split for a mesh — else by BFS order), the blob geometrically
+    bisected along its longer bounding-box axis into matching halves.
+    Leaves assign one request node to the first node of its tile; the
+    resulting assignment is polished by one Hungarian cross-check and a
+    2-opt descent on the selected node set.  O(m log m) selection +
+    O(k^3) polish — cheaper than any pool-scoring strategy, and
+    topology-aware where ``rect`` is not.
+    """
+
+    name = "partition"
+
+    def map_component(self, ctx: MapContext,
+                      comp: FrozenSet[int]) -> Optional[MappingResult]:
+        k = len(ctx.req.order)
+        if len(comp) < k:
+            return None
+        slots = self._bisect(ctx, list(range(k)),
+                             self._trim(ctx, sorted(comp), k))
+        cand = tuple(slots[i] for i in range(k))
+        score = self._score(ctx, [cand])
+        ident = np.arange(k, dtype=np.int64)
+        part_cost = float(batch.induced_batch(
+            ctx.req.A, ctx.req.W_miss, score.A, score.Wsp, score.Cnode,
+            ident[None])[0])
+        # keep the cheaper of (bisection order, Riesen-Bunke assignment)
+        # on the selected tile, then 2-opt to a fixed point
+        if part_cost <= float(score.costs[0]):
+            score.costs[0], score.perms[0] = part_cost, ident
+        best_cost = float(score.costs[0])
+        best_perm = score.perms[0]
+        if best_cost > 0.0:
+            c2, p2 = batch.refine_assignment(ctx.req, score, 0)
+            if c2 < best_cost:
+                best_cost, best_perm = c2, p2
+        return _result_from(ctx, cand, np.asarray(best_perm), best_cost, 1)
+
+    # -- compact-blob pre-trim -----------------------------------------------
+    def _trim(self, ctx: MapContext, region: List[int], k: int) -> List[int]:
+        """Connected k-node blob grown greedily from a corner seed,
+        preferring nodes nearest the seed (Manhattan; ties by id) — the
+        compact tile the bisection then carves up."""
+        if len(region) <= k:
+            return region
+        pcoords = ctx.topo.coords or {}
+        seed = self._leaf_node(ctx, region, pcoords)
+        sxy = pcoords.get(seed)
+
+        def dist(n: int) -> int:
+            p = pcoords.get(n)
+            if sxy is None or p is None:
+                return 0
+            return abs(p[0] - sxy[0]) + abs(p[1] - sxy[1])
+
+        in_region = set(region)
+        chosen = {seed}
+        frontier = {nb for nb in ctx.adj.get(seed, ())
+                    if nb in in_region}
+        while frontier and len(chosen) < k:
+            # most-connected-first keeps the blob square-ish: a node with
+            # two chosen neighbours closes a unit cell, one with a single
+            # neighbour starts a strip
+            n = min(frontier,
+                    key=lambda x: (-sum(nb in chosen
+                                        for nb in ctx.adj.get(x, ())),
+                                   dist(x), x))
+            frontier.discard(n)
+            chosen.add(n)
+            for nb in ctx.adj.get(n, ()):
+                if nb in in_region and nb not in chosen:
+                    frontier.add(nb)
+        if len(chosen) < k:  # pragma: no cover - comp is connected
+            chosen |= set(n for n in region if n not in chosen)
+            return sorted(chosen)[:k]
+        return sorted(chosen)
+
+    # -- recursive bisection -------------------------------------------------
+    def _bisect(self, ctx: MapContext, req_slots: List[int],
+                region: List[int]) -> Dict[int, int]:
+        """slot -> physical node by simultaneous recursive bisection."""
+        rcoords = ctx.t_req.coords or {}
+        pcoords = ctx.topo.coords or {}
+
+        def rxy(slot: int):
+            return rcoords.get(ctx.req.order[slot])
+
+        def split(slots: List[int], nodes: List[int]) -> Dict[int, int]:
+            if len(slots) == 1:
+                return {slots[0]: self._leaf_node(ctx, nodes, pcoords)}
+            n1 = len(slots) - len(slots) // 2
+            n2 = len(slots) - n1
+            slots = self._order(slots, rxy)
+            m = len(nodes)
+            m1 = max(n1, min(m - n2, round(m * n1 / len(slots))))
+            nodes = self._order(nodes, pcoords.get)
+            out = split(slots[:n1], nodes[:m1])
+            out.update(split(slots[n1:], nodes[m1:]))
+            return out
+
+        return split(req_slots, region)
+
+    @staticmethod
+    def _order(items: List, xy) -> List:
+        """Sort by the longer bounding-box axis (ties: the other axis,
+        then identity) — the geometric bisection order.  Items without
+        coordinates keep their given (sorted) order."""
+        pts = [(it, xy(it)) for it in items]
+        if any(p is None for _, p in pts):
+            return list(items)
+        rows = [p[0] for _, p in pts]
+        cols = [p[1] for _, p in pts]
+        if max(rows) - min(rows) >= max(cols) - min(cols):
+            key = lambda t: (t[1][0], t[1][1], t[0])
+        else:
+            key = lambda t: (t[1][1], t[1][0], t[0])
+        return [it for it, _ in sorted(pts, key=key)]
+
+    @staticmethod
+    def _leaf_node(ctx: MapContext, nodes: List[int], pcoords) -> int:
+        if len(nodes) == 1 or not pcoords:
+            return nodes[0]
+        return PartitionMapper._order(nodes, pcoords.get)[0]
+
+
 MAPPERS = {
     cls.name: cls
     for cls in (HybridMapper, BipartiteMapper, ExactMapper,
-                RectangleGreedyMapper)
+                RectangleGreedyMapper, ILPMapper, PartitionMapper)
 }
 
 

@@ -317,6 +317,26 @@ class Hypervisor:
         self.engine.notify_allocate(result.nodes)
         return vnpu
 
+    # -- planned remap (the scheduler's ILP defrag planner) ------------------
+    def apply_mapping(self, vmid: int, result: MappingResult) -> VirtualNPU:
+        """Install an externally-planned mapping onto a live vNPU (the
+        scheduler's defrag planner computed it through the engine's
+        side-effect-free ``free_override`` path).  The destination must be
+        available *now* — free cores plus the vNPU's own, never
+        quarantined — so a stale plan fails loudly instead of corrupting
+        the region tracker.  Same-core-set plans are no-ops (planners drop
+        them, but the check keeps the call idempotent)."""
+        vnpu = self.vnpus[vmid]
+        avail = ((self.free_cores() | set(vnpu.p_cores))
+                 - self.quarantined)
+        if not set(result.nodes) <= avail:
+            raise AllocationError(
+                f"planned mapping for vmid={vmid} uses unavailable cores "
+                f"{sorted(set(result.nodes) - avail)}")
+        if result.nodes == vnpu.p_cores:
+            return vnpu
+        return self._commit_mapping(vnpu, result)
+
     # -- elastic resize (serving plane; used by sched/cluster) --------------
     def resize_vnpu(self, vmid: int, new_topology: Topology,
                     node_match: Optional[NodeMatch] = None) -> VirtualNPU:

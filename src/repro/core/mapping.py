@@ -407,6 +407,10 @@ class MappingResult:
     assignment: Dict[int, int]        # request node id -> physical node id
     exact: bool                       # early-exited with an exact match
     candidates_evaluated: int = 0
+    #: provably minimal TED over *all* injective placements of the request
+    #: into the free component that produced this result (the ILP mapper's
+    #: optimality certificate; heuristic mappers always leave it False)
+    optimal: bool = False
 
 
 def min_topology_edit_distance(

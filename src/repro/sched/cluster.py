@@ -54,6 +54,7 @@ from ..core.workloads import WorkloadGraph
 from ..serve.plane import ServingPlane
 from ..serve.requests import ArrivalProcess, get_profile
 from ..serve.stats import LatencyStats
+from .defrag import DEFRAG_PLANNERS, DefragPlan, ILPDefragPlanner
 from .events import (ARRIVAL, DEPARTURE, EPOCH, FAILURE, RESIZE, EventQueue,
                      TenantSpec)
 from .ledger import InterferenceLedger
@@ -164,6 +165,11 @@ class ClusterMetrics:
     n_rejected: int = 0
     n_migrations: int = 0
     n_failed_cores: int = 0
+    # exact-defrag telemetry (defrag_planner="ilp" only): plans applied,
+    # moves those plans contained, and grows unlocked by a planned defrag
+    n_defrag_plans: int = 0
+    n_planned_moves: int = 0
+    n_resize_defrags: int = 0
     # residents handed back to a fleet router by ``evacuate()`` (pod drain
     # or pod failure) — they depart this pod but are not rejections
     n_evacuated: int = 0
@@ -341,7 +347,8 @@ class ClusterScheduler:
                  rescore: str = "ledger",
                  probe_memo: Optional[bool] = None,
                  serving: Optional[ServingConfig] = None,
-                 admission: str = "fifo"):
+                 admission: str = "fifo",
+                 defrag_planner: str = "greedy"):
         if rescore not in RESCORE_MODES:
             raise ValueError(
                 f"rescore must be one of {RESCORE_MODES}, got {rescore!r}")
@@ -349,12 +356,23 @@ class ClusterScheduler:
             raise ValueError(
                 f"admission must be one of {ADMISSION_MODES}, "
                 f"got {admission!r}")
+        if defrag_planner not in DEFRAG_PLANNERS:
+            raise ValueError(
+                f"defrag_planner must be one of {DEFRAG_PLANNERS}, "
+                f"got {defrag_planner!r}")
         self.policy = policy
         self.hw = hw or S.SIM_CONFIG
         self.topo = policy.topo
         self.epoch_s = epoch_s
         self.defrag = defrag
         self.max_migrations_per_event = max_migrations_per_event
+        # exact (minimum-pause) defragmentation planning — vNPU only; the
+        # greedy default preserves every pinned trajectory bit-for-bit
+        self.defrag_planner = defrag_planner
+        self._planner: Optional[ILPDefragPlanner] = (
+            ILPDefragPlanner(policy, self.hw,
+                             max_migrations=max_migrations_per_event)
+            if defrag_planner == "ilp" and hasattr(policy, "hyp") else None)
         self.rescore_mode = rescore
         # negative-probe memoization rides the fast path; the oracle mode
         # re-probes everything so the CI gate pins the memo's exactness
@@ -787,6 +805,18 @@ class ClusterScheduler:
         self.metrics.n_resize_attempts += 1
         old_n = rt.spec.n_cores
         new_p, resized = self.policy.resize(rt.placement, ev.n_cores)
+        if not resized and self._planner is not None \
+                and ev.n_cores > old_n:
+            # fragmentation-blocked grow: ask the exact planner for the
+            # minimum-pause migration set that frees a big-enough
+            # sub-topology next to the tenant, then retry once
+            plan = self._planner.plan_resize(rt, ev.n_cores,
+                                             self._residents)
+            if plan is not None and self._apply_plan(plan, now):
+                new_p, resized = self.policy.resize(rt.placement,
+                                                    ev.n_cores)
+                if resized:
+                    self.metrics.n_resize_defrags += 1
         if not resized:
             return
         rt.placement = new_p
@@ -881,6 +911,11 @@ class ClusterScheduler:
         moved."""
         if self.policy.can_place(spec, strict=True):
             return False   # nothing to defragment
+        if self._planner is not None:
+            plan = self._planner.plan_admission(spec, self._residents)
+            if plan is not None:
+                return self._apply_plan(plan, now)
+            # no certified plan within bounds — fall through to greedy
         order = sorted(
             self._residents.values(),
             key=lambda r: S.avg_pairwise_hops(self.topo, r.placement.cores),
@@ -900,6 +935,26 @@ class ClusterScheduler:
             if self.policy.can_place(spec, strict=True):
                 break
         return moved_any
+
+    def _apply_plan(self, plan: DefragPlan, now: float) -> bool:
+        """Commit a defrag planner's migration set: install each planned
+        mapping through the hypervisor and charge the usual migration
+        pause.  Returns True iff any tenant moved."""
+        moved = False
+        for mv in plan.moves:
+            rt = self._residents.get(mv.tid)
+            if rt is None:              # pragma: no cover - defensive
+                continue
+            vnpu = self.policy.hyp.apply_mapping(mv.vmid, mv.result)
+            rt.placement = dataclasses.replace(
+                rt.placement, cores=tuple(sorted(vnpu.p_cores)), vnpu=vnpu)
+            self.policy._register(rt.placement)
+            self._charge_migration(rt, now)
+            self.metrics.n_planned_moves += 1
+            moved = True
+        if moved:
+            self.metrics.n_defrag_plans += 1
+        return moved
 
     def _fail_cores(self, cores: Sequence[int], now: float) -> None:
         """Dead hardware: quarantine the cores through the policy, then

@@ -1,0 +1,97 @@
+"""Bench-record lint in tier-1: BENCH_cluster_sim.json must stay
+machine-checkable (the same checks the CI gap-gate job runs via
+tools/check_bench.py)."""
+import importlib.util
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", ROOT / "tools" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def _minimal_record():
+    return {
+        "benchmark": "cluster_sim",
+        "gates": {"serving": {"gate_ok": True, "budget": 60.0}},
+        "entries": [
+            {"mesh": "8x8", "trace": "mixed", "mode": "ledger",
+             "wall_s": 0.5},
+        ],
+    }
+
+
+class TestCheckRecord:
+    def test_minimal_record_is_clean(self):
+        assert check_bench.check_record(_minimal_record()) == []
+
+    def test_wrong_benchmark_name(self):
+        rec = _minimal_record()
+        rec["benchmark"] = "other"
+        assert any("benchmark" in v
+                   for v in check_bench.check_record(rec))
+
+    def test_gate_without_verdict(self):
+        rec = _minimal_record()
+        del rec["gates"]["serving"]["gate_ok"]
+        assert any("gate_ok" in v for v in check_bench.check_record(rec))
+
+    def test_nan_is_flagged(self):
+        rec = _minimal_record()
+        rec["entries"][0]["wall_s"] = float("nan")
+        assert any("non-finite" in v
+                   for v in check_bench.check_record(rec))
+
+    def test_bad_mesh_label(self):
+        rec = _minimal_record()
+        rec["entries"][0]["mesh"] = "not-a-mesh"
+        assert any(".mesh" in v for v in check_bench.check_record(rec))
+
+    def test_unknown_trace(self):
+        rec = _minimal_record()
+        rec["entries"][0]["trace"] = "made-up"
+        assert any(".trace" in v for v in check_bench.check_record(rec))
+
+    def test_gap_suffixed_mesh_accepted(self):
+        rec = _minimal_record()
+        rec["entries"][0].update(mesh="6x6-gap", trace="gap-corpus",
+                                 mode="gap-hybrid")
+        assert check_bench.check_record(rec) == []
+
+    def test_pod_mesh_accepted(self):
+        rec = _minimal_record()
+        rec["entries"][0].update(mesh="8x16x16-fleet", trace="fleet-serving",
+                                 mode="fleet")
+        assert check_bench.check_record(rec) == []
+
+    def test_duplicate_rows_flagged(self):
+        rec = _minimal_record()
+        rec["entries"].append(dict(rec["entries"][0]))
+        assert any("duplicates" in v
+                   for v in check_bench.check_record(rec))
+
+
+class TestRepoRecord:
+    def test_checked_in_record_is_clean(self):
+        assert check_bench.check_file() == []
+
+    def test_gap_gate_recorded_and_passing(self):
+        record = json.loads(check_bench.BENCH_PATH.read_text())
+        gate = record["gates"]["gap-gate"]
+        assert gate["gate_ok"] is True
+        assert gate["no_mapper_beats_oracle"] is True
+        # the pinned bounds in benchmarks/mapping_engine.py are what CI
+        # enforces; the checked-in record must agree with them
+        for mapper, b in gate["bounds"].items():
+            assert b["ok"] is True
+            assert b["max_ted_gap"] <= b["bound"]
+
+    def test_gap_entries_present_for_all_corpora(self):
+        record = json.loads(check_bench.BENCH_PATH.read_text())
+        gap_meshes = {e["mesh"] for e in record["entries"]
+                      if e["trace"] == "gap-corpus"}
+        assert {"6x6-gap", "8x8-gap", "10x10-gap",
+                "12x12-gap", "16x16-gap"} <= gap_meshes

@@ -1,0 +1,313 @@
+"""Mapper conformance suite + placement-quality-oracle differential checks.
+
+Every entry in ``MAPPERS`` — whatever its speed/accuracy trade — must obey
+the same contract: placements land inside the free set, no core is
+double-assigned, the reported TED is exactly the cost the assignment
+induces, and cache decodes (translation and D4) preserve all of that.  The
+``ilp`` strategy additionally *certifies* optimality (``result.optimal``),
+which makes it the differential oracle: no mapper may ever report a TED
+below a proven optimum.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.engine import MAPPERS, MappingEngine
+from repro.core.engine.cache import decode_result, encode_result
+from repro.core.engine.ilp import (HAVE_MILP, placement_milp_size,
+                                   solve_placement_milp)
+from repro.core.mapping import (MappingResult, default_edge_match,
+                                default_node_match, induced_edit_cost)
+from repro.core.topology import mesh_2d
+
+ALL_MAPPERS = sorted(MAPPERS)
+
+# a 6x6 blocking pattern with no free 3x3/3x4 rectangle: every mapper is
+# forced off the TED-0 fast path for the larger shapes
+FRAGMENTED_6X6 = frozenset({2, 4, 8, 9, 14, 16, 20, 22, 26, 28, 32, 33})
+
+
+def _free(topo, blocked):
+    return frozenset(topo.node_attrs) - set(blocked)
+
+
+def _check_contract(topo, req, free, result):
+    """The conformance contract every mapper shares."""
+    assert result.nodes <= free
+    vals = list(result.assignment.values())
+    assert len(vals) == len(set(vals)) == req.num_nodes
+    assert set(vals) == set(result.nodes)
+    ref = induced_edit_cost(req, topo.subgraph(result.nodes),
+                            result.assignment,
+                            default_node_match, default_edge_match)
+    assert result.ted == pytest.approx(ref, abs=1e-12)
+
+
+class TestMapperConformance:
+    @pytest.mark.parametrize("shape", [(2, 2), (2, 3), (3, 3)])
+    @pytest.mark.parametrize("name", ALL_MAPPERS)
+    def test_contract_on_seeded_corpus(self, name, shape):
+        topo = mesh_2d(6, 6)
+        rng = np.random.default_rng(7)
+        blocked = set(rng.choice(sorted(topo.node_attrs), size=10,
+                                 replace=False).tolist())
+        free = _free(topo, blocked)
+        eng = MappingEngine(topo, mapper=name)
+        req = mesh_2d(*shape, base_id=10_000)
+        res = eng.map_request(req, require_connected=False,
+                              free_override=free)
+        assert res is not None
+        _check_contract(topo, req, free, res)
+
+    @pytest.mark.parametrize("name", ALL_MAPPERS)
+    def test_contract_on_fragmented_corpus(self, name):
+        topo = mesh_2d(6, 6)
+        free = _free(topo, FRAGMENTED_6X6)
+        eng = MappingEngine(topo, mapper=name)
+        req = mesh_2d(2, 3, base_id=10_000)
+        res = eng.map_request(req, require_connected=False,
+                              free_override=free)
+        assert res is not None
+        _check_contract(topo, req, free, res)
+
+    @pytest.mark.parametrize("name", ALL_MAPPERS)
+    def test_translation_decode_preserves_contract(self, name):
+        """Solve with a free 3x3 blob in one corner, then translate the
+        blob: the (likely cached) second answer must still satisfy the
+        contract on the *new* coordinates."""
+        topo = mesh_2d(6, 6)
+        by_coord = {v: k for k, v in topo.coords.items()}
+        all_nodes = set(topo.node_attrs)
+        req = mesh_2d(2, 2, base_id=10_000)
+        eng = MappingEngine(topo, mapper=name)
+        for origin in ((0, 0), (3, 3), (1, 2)):
+            keep = {by_coord[(origin[0] + r, origin[1] + c)]
+                    for r in range(3) for c in range(3)}
+            eng.notify_allocate(all_nodes - keep)
+            res = eng.map_request(req)
+            assert res is not None
+            _check_contract(topo, req, frozenset(keep), res)
+            eng.notify_release(all_nodes - keep)
+
+    def test_unknown_mapper_name_rejected(self):
+        with pytest.raises((KeyError, ValueError)):
+            MappingEngine(mesh_2d(4, 4), mapper="definitely-not-a-mapper")
+
+
+# the eight lattice transforms, matching regions.D4_TRANSFORMS
+D4_FNS = {
+    "identity": lambda r, c, R, C: (r, c),
+    "rot90": lambda r, c, R, C: (c, R - 1 - r),
+    "rot180": lambda r, c, R, C: (R - 1 - r, C - 1 - c),
+    "rot270": lambda r, c, R, C: (C - 1 - c, r),
+    "flip_rows": lambda r, c, R, C: (R - 1 - r, c),
+    "flip_cols": lambda r, c, R, C: (r, C - 1 - c),
+    "transpose": lambda r, c, R, C: (c, r),
+    "anti_transpose": lambda r, c, R, C: (C - 1 - c, R - 1 - r),
+}
+
+
+def _uniform(topo):
+    for n in topo.node_attrs:
+        topo.node_attrs[n]["mem_dist"] = 0
+    return topo
+
+
+class TestD4Decode:
+    @pytest.mark.parametrize("name", ALL_MAPPERS)
+    def test_all_orientations_valid(self, name):
+        R = C = 7
+        topo = _uniform(mesh_2d(R, C))
+        req = _uniform(mesh_2d(2, 3, base_id=10_000))
+        by_coord = {v: k for k, v in topo.coords.items()}
+        all_nodes = set(topo.node_attrs)
+        blob = {(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2), (2, 0)}
+        eng = MappingEngine(topo, mapper=name)
+        prev: set = set()
+        base_ted = None
+        for tname, fn in D4_FNS.items():
+            keep = {by_coord[fn(r, c, R, C)] for r, c in blob}
+            if prev:
+                eng.notify_release(all_nodes - prev)
+            eng.notify_allocate(all_nodes - keep)
+            prev = keep
+            res = eng.map_request(req)
+            assert res is not None, (name, tname)
+            _check_contract(topo, req, frozenset(keep), res)
+            if base_ted is None:
+                base_ted = res.ted
+            elif res.ted == 0.0 or base_ted == 0.0:
+                assert res.ted == base_ted, (name, tname)
+
+
+class TestOracleDifferential:
+    """No mapper beats a proven ILP optimum — the oracle property the
+    gap-gate harness enforces at benchmark scale."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_no_mapper_beats_ilp_small_mesh(self, seed):
+        topo = mesh_2d(5, 5)
+        rng = np.random.default_rng(seed)
+        blocked = set(rng.choice(sorted(topo.node_attrs), size=9,
+                                 replace=False).tolist())
+        free = _free(topo, blocked)
+        for shape in ((2, 2), (2, 3)):
+            req = mesh_2d(*shape, base_id=10_000)
+            opt = MappingEngine(topo, mapper="ilp").map_request(
+                req, require_connected=False, free_override=free)
+            if opt is None:
+                continue
+            assert opt.optimal, "5x5 components must be MILP-provable"
+            for name in ALL_MAPPERS:
+                got = MappingEngine(topo, mapper=name).map_request(
+                    req, require_connected=False, free_override=free)
+                if got is not None:
+                    assert got.ted >= opt.ted - 1e-9, (name, shape, seed)
+
+    @pytest.mark.slow
+    def test_ilp_matches_exact_branch_and_bound(self):
+        """On the fragmented 6x6 corpus where the budgeted exact B&B
+        terminates, the MILP certificate agrees with it exactly."""
+        topo = mesh_2d(6, 6)
+        free = _free(topo, FRAGMENTED_6X6)
+        req = mesh_2d(3, 3, base_id=10_000)
+        opt = MappingEngine(topo, mapper="ilp").map_request(
+            req, require_connected=False, free_override=free)
+        exact = MappingEngine(topo, mapper="exact").map_request(
+            req, require_connected=False, free_override=free)
+        assert opt is not None and exact is not None
+        assert opt.optimal
+        assert opt.ted == pytest.approx(exact.ted)
+
+    @pytest.mark.slow
+    def test_ilp_proves_nonzero_ted_within_budget(self):
+        """The directed MILP formulation proves a k=12 nonzero-TED optimum
+        on the fragmented mesh (the case the naive linearization cannot
+        close within any reasonable budget)."""
+        topo = mesh_2d(6, 6)
+        free = _free(topo, FRAGMENTED_6X6)
+        req = mesh_2d(3, 4, base_id=10_000)
+        opt = MappingEngine(topo, mapper="ilp").map_request(
+            req, require_connected=False, free_override=free)
+        assert opt is not None
+        assert opt.optimal
+        assert opt.ted > 0.0
+
+
+class TestMilpFormulation:
+    @pytest.mark.skipif(not HAVE_MILP, reason="scipy.milp unavailable")
+    def test_square_case_matches_hand_count(self):
+        """2-node path request into a 2-node path candidate: perfect
+        embedding, objective recovers TED 0 slots."""
+        A = np.array([[0, 1], [1, 0]], bool)
+        W = np.ones((2, 2))
+        C = np.zeros((2, 2))
+        sol = solve_placement_milp(A, W, C, A, W, time_limit=5.0)
+        assert sol is not None and sol.proven
+        assert sorted(sol.slots.tolist()) == [0, 1]
+
+    @pytest.mark.skipif(not HAVE_MILP, reason="scipy.milp unavailable")
+    def test_rectangular_selection_avoids_spurious(self):
+        """Placing a 2-node *edgeless* request into a triangle (all edges
+        spurious) vs a path-plus-isolate: the optimum uses the isolated
+        node to dodge one spurious edge."""
+        req_A = np.zeros((2, 2), bool)
+        req_W = np.zeros((2, 2))
+        # candidate: nodes 0-1 adjacent, node 2 isolated
+        cand_A = np.zeros((3, 3), bool)
+        cand_A[0, 1] = cand_A[1, 0] = True
+        cand_W = np.ones((3, 3))
+        C = np.zeros((2, 3))
+        sol = solve_placement_milp(req_A, req_W, C, cand_A, cand_W,
+                                   time_limit=5.0)
+        assert sol is not None and sol.proven
+        assert 2 in sol.slots.tolist()      # the isolate is used
+        assert sol.objective == pytest.approx(0.0)
+
+    def test_size_gate_formula(self):
+        # k*m assignment vars + 2 directed arcs per (req edge, cand edge)
+        # + one spurious var per candidate edge
+        assert placement_milp_size(2, 3, 1, 2) == 2 * 3 + 2 * 1 * 2 + 2
+
+
+class TestOptimalFlagProtocol:
+    def test_cache_roundtrip_preserves_optimal(self):
+        res = MappingResult(nodes=frozenset({5, 6}), ted=1.5,
+                            assignment={100: 5, 101: 6}, exact=True,
+                            candidates_evaluated=3, optimal=True)
+        enc = encode_result(res, [5, 6, 7], [100, 101])
+        assert enc.optimal
+        dec = decode_result(enc, [5, 6, 7], [100, 101])
+        assert dec.optimal and dec.ted == res.ted
+
+    def test_heuristic_results_not_marked_optimal(self):
+        topo = mesh_2d(6, 6)
+        free = _free(topo, FRAGMENTED_6X6)
+        req = mesh_2d(2, 3, base_id=10_000)
+        for name in ("hybrid", "bipartite", "rect", "partition"):
+            res = MappingEngine(topo, mapper=name).map_request(
+                req, require_connected=False, free_override=free)
+            assert res is not None
+            assert not res.optimal
+
+    def test_ilp_marks_optimal_on_perfect_fit(self):
+        topo = mesh_2d(4, 4)
+        req = mesh_2d(2, 2, base_id=10_000)
+        res = MappingEngine(topo, mapper="ilp").map_request(req)
+        assert res is not None
+        assert res.ted == 0.0 and res.optimal
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_ilp_contract_property(self, seed):
+        """Property: on random 5x5 blockings the ilp mapper's result obeys
+        the conformance contract and its certificate is never set on a
+        result that another mapper improves upon."""
+        topo = mesh_2d(5, 5)
+        rng = np.random.default_rng(seed)
+        n_blocked = int(rng.integers(0, 14))
+        blocked = set(rng.choice(sorted(topo.node_attrs), size=n_blocked,
+                                 replace=False).tolist())
+        free = _free(topo, blocked)
+        req = mesh_2d(2, 2, base_id=10_000)
+        if len(free) < 4:
+            return
+        res = MappingEngine(topo, mapper="ilp").map_request(
+            req, require_connected=False, free_override=free)
+        if res is None:
+            return
+        _check_contract(topo, req, free, res)
+        if res.optimal:
+            hyb = MappingEngine(topo, mapper="hybrid").map_request(
+                req, require_connected=False, free_override=free)
+            if hyb is not None:
+                assert hyb.ted >= res.ted - 1e-9
+
+
+class TestPartitionMapper:
+    def test_perfect_fit_on_empty_mesh(self):
+        """The compact-blob pre-trim must carve an exact rectangle out of
+        an untouched mesh — TED 0, no search involved."""
+        topo = mesh_2d(6, 6)
+        req = mesh_2d(2, 2, base_id=10_000)
+        res = MappingEngine(topo, mapper="partition").map_request(req)
+        assert res is not None
+        assert res.ted == 0.0
+
+    def test_single_candidate_evaluated(self):
+        """partition is O(1) in pool terms: exactly one candidate scored."""
+        topo = mesh_2d(6, 6)
+        req = mesh_2d(2, 3, base_id=10_000)
+        res = MappingEngine(topo, mapper="partition").map_request(req)
+        assert res is not None
+        assert res.candidates_evaluated == 1

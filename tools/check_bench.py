@@ -1,0 +1,133 @@
+"""Bench-record lint: BENCH_cluster_sim.json must stay machine-checkable.
+
+The benchmark scripts (``benchmarks/cluster_sim.py``, ``serving_sim.py``,
+``fleet_sim.py`` and ``mapping_engine.py --gap-gate``) all merge their
+results into one ledger file via ``_write_bench``.  CI and the docs quote
+numbers straight out of that file, so a malformed merge (NaN wall-times,
+a gate slot without a verdict, an entry that lost its mesh key) silently
+poisons every downstream claim.  This lint validates the record:
+
+* top-level shape: ``benchmark == "cluster_sim"``, ``entries`` a list,
+  ``gates`` a dict;
+* every gate record carries a boolean ``gate_ok``;
+* every entry names a known ``trace``, a ``mesh`` matching
+  ``ROWSxCOLS`` (with an optional suffix such as ``8x16x16-fleet`` or
+  ``6x6-gap``) and a non-empty ``mode``;
+* every numeric field in every entry and gate is finite (no NaN/inf);
+* no duplicate ``(mesh, trace, mode)`` rows — ``_write_bench`` keys its
+  replacement on those, so duplicates mean the merge logic regressed.
+
+Run:  python tools/check_bench.py
+(the CI gap-gate job; ``tests/test_bench_record.py`` runs the same checks
+in tier-1).  Exits non-zero listing every violation.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+from typing import Any, Dict, List
+
+ROOT = Path(__file__).resolve().parent.parent
+BENCH_PATH = ROOT / "BENCH_cluster_sim.json"
+
+# mesh labels: "16x16", "8x16x16-fleet" (pods), "6x6-gap", "32x32-pod-serving"
+MESH_RE = r"^\d+x\d+(x\d+)?(-[a-z][a-z-]*)?$"
+
+# traces written by the benchmark scripts; "gap-corpus" is the synthetic
+# corpus label used by mapping_engine.py --gap-gate
+KNOWN_TRACES = frozenset({
+    "bursty", "fleet-serving", "large", "mixed", "pod-mixed",
+    "pod-serving", "serving", "small", "gap-corpus",
+})
+
+
+def _finite_violations(prefix: str, obj: Any, out: List[str]) -> None:
+    """Walk nested dicts/lists and flag every non-finite float."""
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            _finite_violations(f"{prefix}.{k}", v, out)
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            _finite_violations(f"{prefix}[{i}]", v, out)
+    elif isinstance(obj, float) and not math.isfinite(obj):
+        out.append(f"{prefix}: non-finite value {obj!r}")
+
+
+def check_record(record: Dict[str, Any]) -> List[str]:
+    import re
+    violations: List[str] = []
+    if record.get("benchmark") != "cluster_sim":
+        violations.append(
+            f"benchmark field is {record.get('benchmark')!r}, "
+            "expected 'cluster_sim'")
+
+    gates = record.get("gates")
+    if not isinstance(gates, dict):
+        violations.append(f"gates is {type(gates).__name__}, expected dict")
+        gates = {}
+    for name, gate in sorted(gates.items()):
+        if not isinstance(gate, dict):
+            violations.append(f"gates[{name!r}] is not a dict")
+            continue
+        if not isinstance(gate.get("gate_ok"), bool):
+            violations.append(f"gates[{name!r}] missing boolean gate_ok")
+        _finite_violations(f"gates[{name!r}]", gate, violations)
+
+    entries = record.get("entries")
+    if not isinstance(entries, list):
+        violations.append(
+            f"entries is {type(entries).__name__}, expected list")
+        entries = []
+    mesh_re = re.compile(MESH_RE)
+    seen: Dict[tuple, int] = {}
+    for i, e in enumerate(entries):
+        if not isinstance(e, dict):
+            violations.append(f"entries[{i}] is not a dict")
+            continue
+        mesh, trace, mode = e.get("mesh"), e.get("trace"), e.get("mode")
+        if not (isinstance(mesh, str) and mesh_re.match(mesh)):
+            violations.append(
+                f"entries[{i}].mesh {mesh!r} does not match {MESH_RE}")
+        if trace not in KNOWN_TRACES:
+            violations.append(
+                f"entries[{i}].trace {trace!r} not a known trace")
+        if not (isinstance(mode, str) and mode):
+            violations.append(f"entries[{i}].mode {mode!r} is empty")
+        key = (mesh, trace, mode)
+        if key in seen:
+            violations.append(
+                f"entries[{i}] duplicates entries[{seen[key]}] "
+                f"(mesh={mesh!r}, trace={trace!r}, mode={mode!r})")
+        else:
+            seen[key] = i
+        _finite_violations(f"entries[{i}]", e, violations)
+    return violations
+
+
+def check_file(path: Path = BENCH_PATH) -> List[str]:
+    if not path.exists():
+        return [f"{path.name}: missing"]
+    try:
+        record = json.loads(path.read_text())
+    except json.JSONDecodeError as exc:
+        return [f"{path.name}: invalid JSON ({exc})"]
+    return [f"{path.name}: {v}" for v in check_record(record)]
+
+
+def main() -> int:
+    violations = check_file()
+    if violations:
+        print(f"check_bench: {len(violations)} violation(s)")
+        for v in violations:
+            print(f"  - {v}")
+        return 1
+    record = json.loads(BENCH_PATH.read_text())
+    print(f"check_bench: OK ({len(record['entries'])} entries, "
+          f"{len(record['gates'])} gates)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
