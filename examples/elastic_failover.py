@@ -1,7 +1,8 @@
 """Elastic failover drill through the cluster placement API:
 train -> checkpoint -> 'device failure' -> policy-driven live migration
 (similar-topology remap avoiding the dead core) -> restore on the new
-submesh -> keep training.
+submesh -> keep training -> 'device repaired' -> capacity returns to the
+free pool.
 
 The paper's topology mapper is the failover mechanism: ``VNPUPolicy.migrate``
 re-runs minTopologyEditDistance over the survivors (the same call the
@@ -85,6 +86,19 @@ def main():
             state, m = step(state, batch_at(i))
     print(f"resumed training, step={int(state['step'])}, "
           f"loss={float(m['loss']):.3f}")
+
+    # ---- the device comes back from maintenance -----------------------
+    # repair is the other half of the chaos plane: the quarantined core
+    # rejoins the free pool (the scheduler's REPAIR event drives this
+    # same call and then drains its admission queue)
+    policy.mark_repaired([dead])
+    assert dead in policy.free_cores()
+    spare = policy.allocate(TenantSpec(tid=2, model="qwen2_0_5b",
+                                       n_cores=4, arrival_s=0.0,
+                                       duration_s=60.0))
+    print(f"core {dead} repaired; new tenant placed on "
+          f"{list(spare.cores)} using the restored capacity")
+    policy.release(spare)
     print("OK")
 
 

@@ -55,6 +55,9 @@ class MIGPartitioner:
         self._next_vmid = 1
         # vmid -> (partition id, requested virtual core count)
         self._tenants: Dict[int, Tuple[int, int]] = {}
+        # individual dead cores (a partition stays poisoned until every one
+        # of its dead cores is repaired)
+        self.failed_cores: Set[int] = set()
 
     def _carve(self, shapes: Sequence[Tuple[int, int]]) -> None:
         """Tile the mesh left-to-right, top-to-bottom with the given shapes."""
@@ -117,10 +120,20 @@ class MIGPartitioner:
         so a dead core poisons its whole partition — it is never handed
         out again (a resident, if any, keeps its placement until the
         caller migrates it off via a fresh ``allocate``)."""
-        dead = set(cores)
+        dead = set(cores) & set(self.topo.node_attrs)
+        self.failed_cores |= dead
         for p in self.partitions:
             if dead & p.cores:
                 p.failed = True
+
+    def mark_repaired(self, cores: Iterable[int]) -> None:
+        """Repaired hardware: a partition is handed out again only once
+        *every* dead core inside it is back (partition-granular recovery —
+        the MIG model cannot serve around a single bad core)."""
+        self.failed_cores -= set(cores)
+        for p in self.partitions:
+            if p.failed and not (self.failed_cores & p.cores):
+                p.failed = False
 
     def utilization(self) -> float:
         """Useful cores / healthy cores: an occupied partition contributes
@@ -178,9 +191,15 @@ class UVMAllocator:
         self.allocated -= set(cores)
 
     def mark_failed(self, cores: Iterable[int]) -> None:
-        """Dead hardware: the cores never rejoin the free pool (an owner,
-        if any, keeps them until released — migrate it off first)."""
+        """Dead hardware: the cores stay quarantined until repaired (an
+        owner, if any, keeps them until released — migrate it off first)."""
         self.quarantined |= set(cores)
+
+    def mark_repaired(self, cores: Iterable[int]) -> None:
+        """Repaired hardware: lift the quarantine.  A repaired core that is
+        still owned simply keeps serving its owner; an unowned one is free
+        again immediately."""
+        self.quarantined -= set(cores)
 
     def utilization(self) -> float:
         """Allocated healthy cores / healthy cores, in [0, 1] (quarantined

@@ -140,6 +140,19 @@ class Hypervisor:
         # allocated ones are withheld at release time instead
         self.engine.notify_allocate(new & self.engine.regions.free)
 
+    def mark_repaired(self, cores: Iterable[int]) -> None:
+        """Lift the quarantine on repaired cores.  Unowned ones rejoin the
+        engine's free regions immediately; a repaired core still owned by a
+        vNPU just keeps serving it and rejoins the pool through the normal
+        release path (which only withholds *still-quarantined* cores)."""
+        back = set(int(c) for c in cores) & self.quarantined
+        if not back:
+            return
+        self.quarantined -= back
+        unowned = back - self.allocated_cores()
+        if unowned:
+            self.engine.notify_release(unowned)
+
     # -- placement ----------------------------------------------------------
     def _map_request(self, request: VNPURequest,
                      node_match: Optional[NodeMatch],

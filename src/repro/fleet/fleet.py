@@ -29,10 +29,18 @@ Scenario semantics:
   barrier >= ``t_s + duration_s`` the pod is un-drained and re-enters
   the routing rotation.
 * ``pod-failure``: same evacuation, but the pod never comes back.
+* ``switch-brownout``: the inter-pod switch's effective bandwidth drops
+  by ``factor`` for ``duration_s`` — checkpoint transfers serialize
+  proportionally slower until the first barrier past the restore time.
 
-Tenants the router cannot place anywhere eligible are counted
-(``RouterStats.unroutable``), not crashed — the fleet-scale analog of an
-admission rejection.
+Tenants the router cannot place anywhere eligible are *retried*, not
+lost: each unroutable tenant enters a bounded exponential-backoff queue
+(``retry_base_s * 2**attempts``, up to ``retry_max`` re-route attempts)
+and re-routes at a later barrier against fresh snapshots.  Exhausted
+retries — and retries still waiting when the run ends — are dropped and
+counted (``FleetMetrics.n_dropped``); every deferral is counted too
+(``FleetMetrics.n_retried``).  The queue lives in the driver process, so
+serial and parallel executors stay bit-identical.
 """
 from __future__ import annotations
 
@@ -58,12 +66,15 @@ FLEET_PER_POD_RATE = 1.6
 @dataclasses.dataclass
 class Scenario:
     """One fleet-wide event: ``kind`` is ``"upgrade"`` (drain for
-    ``duration_s``, then return to service) or ``"pod-failure"``
-    (permanent).  Applied at the first window barrier >= ``t_s``."""
+    ``duration_s``, then return to service), ``"pod-failure"``
+    (permanent), or ``"switch-brownout"`` (inter-pod bandwidth divided by
+    ``factor`` for ``duration_s``; ``pod_id`` is ignored).  Applied at
+    the first window barrier >= ``t_s``."""
     kind: str
     t_s: float
     pod_id: int
     duration_s: float = 0.0
+    factor: float = 1.0
 
 
 @dataclasses.dataclass
@@ -83,6 +94,10 @@ class FleetConfig:
     #: how long past the last arrival the fleet keeps running so admitted
     #: tenants drain out (the serving catalog's clipped service ceiling)
     drain_tail_s: float = 150.0
+    #: unroutable tenants re-route after this backoff, doubled per failed
+    #: attempt; after ``retry_max`` re-route failures the tenant is dropped
+    retry_base_s: float = 2.0
+    retry_max: int = 4
 
 
 @dataclasses.dataclass
@@ -98,6 +113,8 @@ class FleetMetrics:
     n_windows: int
     workers: int
     wall_s: float
+    n_retried: int = 0      # unroutable deferrals through the retry queue
+    n_dropped: int = 0      # retry budget exhausted or run ended waiting
 
     @property
     def requests_arrived(self) -> int:
@@ -139,6 +156,8 @@ class FleetMetrics:
             "evacuated": sum(p.n_evacuated for p in self.pods),
             "migrations": sum(p.n_migrations for p in self.pods),
             "resizes": sum(p.n_resizes for p in self.pods),
+            "n_retried": self.n_retried,
+            "n_dropped": self.n_dropped,
             "router": self.router.as_dict(),
             "switch": self.switch.as_dict(),
         }
@@ -237,7 +256,7 @@ class Fleet:
             end_s = last + cfg.drain_tail_s
         pending = sorted(scenarios, key=lambda s: (s.t_s, s.pod_id, s.kind))
         for sc in pending:
-            if sc.kind not in ("upgrade", "pod-failure"):
+            if sc.kind not in ("upgrade", "pod-failure", "switch-brownout"):
                 raise ValueError(f"unknown scenario kind {sc.kind!r}")
 
         t0 = time.perf_counter()
@@ -251,14 +270,22 @@ class Fleet:
             pods=metrics[0], pod_ids=[ps.pod_id for ps in self.pods],
             router=self.router.stats, switch=self.switch.stats,
             horizon_s=end_s, window_s=cfg.window_s, n_windows=metrics[1],
-            workers=getattr(ex, "workers", workers), wall_s=wall)
+            workers=getattr(ex, "workers", workers), wall_s=wall,
+            n_retried=metrics[2], n_dropped=metrics[3])
 
     # -- the window loop ---------------------------------------------------
     def _drive(self, ex, arrivals: List[TenantSpec],
                pending: List[Scenario],
-               end_s: float) -> Tuple[List[ClusterMetrics], int]:
+               end_s: float) -> Tuple[List[ClusterMetrics], int, int, int]:
         cfg = self.config
         undrain_at: List[Tuple[float, int]] = []
+        restore_at: List[float] = []     # brownout ends (switch back to 1.0)
+        # unroutable tenants awaiting re-route: (ready_s, attempts,
+        # src pod id for evacuees — their checkpoint still has to cross the
+        # switch on success — or None, spec)
+        retry: List[Tuple[float, int, Optional[int], TenantSpec]] = []
+        n_retried = 0
+        n_dropped = 0
         idx = 0
         t = 0.0
         n_windows = 0
@@ -277,10 +304,21 @@ class Fleet:
                     still.append((when, pid))
             undrain_at = still
 
+            # brownouts whose duration elapsed restore full bandwidth
+            if restore_at and restore_at[0] <= t:
+                restore_at = [when for when in restore_at if when > t]
+                if not restore_at:
+                    self.switch.set_degradation(1.0)
+
             # due scenarios: drain/fail, evacuate, re-route via the router
             batches: Dict[int, List[TenantSpec]] = {}
             while pending and pending[0].t_s <= t:
                 sc = pending.pop(0)
+                if sc.kind == "switch-brownout":
+                    self.switch.set_degradation(sc.factor)
+                    restore_at.append(sc.t_s + sc.duration_s)
+                    restore_at.sort()
+                    continue
                 if sc.kind == "upgrade":
                     ex.drain(sc.pod_id)
                     views[sc.pod_id].draining = True
@@ -294,7 +332,12 @@ class Fleet:
                 for spec in residents:
                     dst = self.router.route(spec, view_list, migration=True)
                     if dst is None:
-                        continue    # counted unroutable; tenant is lost
+                        # counted unroutable; the tenant waits in the retry
+                        # queue instead of being lost
+                        n_retried += 1
+                        retry.append((t + cfg.retry_base_s, 1,
+                                      sc.pod_id, spec))
+                        continue
                     # the checkpoint (weights + KV arena = memory_bytes)
                     # crosses the switch; the tenant re-arrives when the
                     # transfer completes
@@ -308,15 +351,47 @@ class Fleet:
                     dst = self.router.route(spec, view_list, migration=True)
                     if dst is not None:
                         batches.setdefault(dst, []).append(spec)
+                    else:
+                        n_retried += 1
+                        retry.append((t + cfg.retry_base_s, 1, None, spec))
+
+            view_list = [views[ps.pod_id] for ps in self.pods]
+
+            # due retries re-route first — they predate this window's
+            # arrivals; backoff doubles per failed attempt, a bounded
+            # number of attempts, then the tenant is dropped for real
+            if retry:
+                due = sorted((r for r in retry if r[0] <= t),
+                             key=lambda r: (r[0], r[3].tid))
+                retry = [r for r in retry if r[0] > t]
+                for ready, attempts, src, spec in due:
+                    dst = self.router.route(spec, view_list,
+                                            migration=src is not None)
+                    if dst is None:
+                        if attempts >= cfg.retry_max:
+                            n_dropped += 1
+                        else:
+                            n_retried += 1
+                            backoff = cfg.retry_base_s * (2.0 ** attempts)
+                            retry.append((t + backoff, attempts + 1,
+                                          src, spec))
+                        continue
+                    if src is not None:
+                        done = self.switch.transfer(src, dst,
+                                                    spec.memory_bytes, t)
+                        spec = dataclasses.replace(spec, arrival_s=done)
+                    batches.setdefault(dst, []).append(spec)
 
             # this window's arrivals, routed against the barrier snapshots
-            view_list = [views[ps.pod_id] for ps in self.pods]
             while idx < len(arrivals) and arrivals[idx].arrival_s < t_next:
                 spec = arrivals[idx]
                 idx += 1
                 dst = self.router.route(spec, view_list)
                 if dst is not None:
                     batches.setdefault(dst, []).append(spec)
+                else:
+                    n_retried += 1
+                    retry.append((t + cfg.retry_base_s, 1, None, spec))
 
             if batches:
                 ex.feed_many(batches)
@@ -325,4 +400,5 @@ class Fleet:
             t = t_next
             if t >= end_s:
                 break
-        return ex.finish_all(), n_windows
+        n_dropped += len(retry)        # still waiting when the run ended
+        return ex.finish_all(), n_windows, n_retried, n_dropped

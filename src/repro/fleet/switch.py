@@ -50,6 +50,7 @@ class SwitchStats:
     queued_s: float = 0.0             # summed head-of-line waiting time
     buffer_overflows: int = 0         # enqueues that found a full buffer
     max_backlog_bytes: int = 0
+    n_brownouts: int = 0              # degradations applied (chaos plane)
 
     def as_dict(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
@@ -69,13 +70,29 @@ class PodSwitch:
         self.config = config
         self._free_at: Dict[Link, float] = {}
         self._backlog: Dict[Link, Tuple[float, int]] = {}  # (asof, bytes)
+        self._degrade = 1.0               # brownout factor (>= 1)
         self.stats = SwitchStats()
+
+    def set_degradation(self, factor: float) -> None:
+        """Switch brownout (chaos plane): every link's effective bandwidth
+        becomes ``bandwidth / factor`` until reset to 1.0.  Driven only at
+        fleet barriers, so the serialized-transfer arithmetic stays
+        deterministic across executors."""
+        f = float(factor)
+        if f < 1.0:
+            raise ValueError(f"brownout factor must be >= 1, got {f}")
+        if f > 1.0:
+            self.stats.n_brownouts += 1
+        self._degrade = f
+
+    def _bandwidth(self) -> float:
+        return self.config.bandwidth_bytes_per_s / self._degrade
 
     def _drain_backlog(self, link: Link, now: float) -> int:
         """Bytes still queued on ``link`` at ``now`` (the serialized bytes
         whose transmission has not finished yet)."""
         asof, backlog = self._backlog.get(link, (0.0, 0))
-        drained = int((now - asof) * self.config.bandwidth_bytes_per_s)
+        drained = int((now - asof) * self._bandwidth())
         return max(backlog - max(drained, 0), 0)
 
     def transfer(self, src_pod: int, dst_pod: int, n_bytes: int,
@@ -88,7 +105,7 @@ class PodSwitch:
         link = (int(src_pod), int(dst_pod))
         n_bytes = int(n_bytes)
         start = max(now, self._free_at.get(link, 0.0))
-        serialize = n_bytes / max(cfg.bandwidth_bytes_per_s, 1e-9)
+        serialize = n_bytes / max(self._bandwidth(), 1e-9)
         done = start + cfg.latency_s + serialize
         backlog = self._drain_backlog(link, now)
         if backlog > cfg.buffer_bytes:

@@ -28,7 +28,7 @@ from .policy import (MIGPolicy, Placement, PlacementPolicy, UVMPolicy,
                      VNPUPolicy, make_policy)
 from .traces import TraceConfig, make_trace, poisson_trace, TRACES
 from .cluster import (ClusterMetrics, ClusterScheduler, EpochSample,
-                      ServingConfig, compare_policies)
+                      RecoveryConfig, ServingConfig, compare_policies)
 
 __all__ = [
     "Event", "EventQueue", "TenantSpec",
@@ -36,6 +36,6 @@ __all__ = [
     "Placement", "PlacementPolicy", "VNPUPolicy", "MIGPolicy", "UVMPolicy",
     "make_policy",
     "TraceConfig", "make_trace", "poisson_trace", "TRACES",
-    "ClusterMetrics", "ClusterScheduler", "EpochSample", "ServingConfig",
-    "compare_policies",
+    "ClusterMetrics", "ClusterScheduler", "EpochSample", "RecoveryConfig",
+    "ServingConfig", "compare_policies",
 ]

@@ -55,7 +55,8 @@ from ..serve.plane import ServingPlane
 from ..serve.requests import ArrivalProcess, get_profile
 from ..serve.stats import LatencyStats
 from .defrag import DEFRAG_PLANNERS, DefragPlan, ILPDefragPlanner
-from .events import (ARRIVAL, DEPARTURE, EPOCH, FAILURE, RESIZE, EventQueue,
+from .events import (ARRIVAL, DEPARTURE, EPOCH, FAILURE, LINK_DEGRADE,
+                     LINK_FAIL, LINK_REPAIR, REPAIR, RESIZE, EventQueue,
                      TenantSpec)
 from .ledger import InterferenceLedger
 from .policy import Placement, PlacementPolicy
@@ -109,6 +110,29 @@ class ServingConfig:
     arrival: Optional[ArrivalProcess] = None
     rate_scale: float = 1.0
     request_mix: str = "default"
+
+
+@dataclasses.dataclass
+class RecoveryConfig:
+    """Arms the chaos-plane recovery semantics (``recovery=`` kwarg).
+
+    With a config bound, a resident whose placement is destroyed by a
+    fault *and* cannot be migrated is killed and recovered instead of
+    left running degraded: training-class tenants
+    (``TenantSpec.tenant_class == "train"``) resume from their last
+    periodic checkpoint — the work since that boundary is redone and the
+    restore (scratchpad re-warm + routing-table resharding, the same
+    Fig.-11 arithmetic as a migration) delays re-entry; every other
+    tenant re-arrives through a bounded exponential-backoff retry queue
+    (``retry_base_s * 2**attempt``, dropped after ``retry_max``
+    attempts).  ``migrate_on_link_fail`` additionally evacuates residents
+    off a hard-failed NoC link's endpoints.  Without a config (the
+    default) fault handling is bit-identical to the historical behavior.
+    """
+    ckpt_interval_s: float = 10.0
+    retry_base_s: float = 0.5
+    retry_max: int = 5
+    migrate_on_link_fail: bool = True
 
 
 @dataclasses.dataclass
@@ -179,6 +203,22 @@ class ClusterMetrics:
     n_events: int = 0                 # events processed by the run loop
     util_integral: float = 0.0        # ∫ utilization dt
     horizon_s: float = 0.0
+    # ---- chaos-plane recovery SLOs (fault/repair runs only) ----
+    n_repaired_cores: int = 0         # cores returned to service
+    n_repairs: int = 0                # closed fail->repair intervals
+    mttr_sum_s: float = 0.0           # Σ (repair - fail) over closed intervals
+    core_downtime_s: float = 0.0      # ∫ dead-core count dt (core-seconds)
+    n_cores_total: int = 0            # mesh size, stamped at finish()
+    n_link_faults: int = 0            # link-fail + link-degrade events
+    n_link_repairs: int = 0
+    n_link_migrations: int = 0        # residents moved off a failed link
+    n_fault_kills: int = 0            # residents killed by core faults
+    n_ckpt_resumes: int = 0           # train tenants resumed from checkpoint
+    rework_s: float = 0.0             # work redone since the last checkpoint
+    rewarm_cost_s: float = 0.0        # restore/re-shard pauses charged
+    n_fault_retries: int = 0          # serve tenants queued for re-admission
+    n_fault_drops: int = 0            # retry budget exhausted: tenant lost
+    requests_fault_lost: int = 0      # in-flight requests lost at fault kills
     tenant_iterations: Dict[int, float] = dataclasses.field(
         default_factory=dict)
     tenant_active_s: Dict[int, float] = dataclasses.field(
@@ -252,6 +292,48 @@ class ClusterMetrics:
         return float(np.median(np.array(self.scoring_pass_s))) * 1e3
 
     @property
+    def mttr_s(self) -> float:
+        """Mean time to repair: average seconds a dead core stayed down,
+        over the fail->repair intervals that closed inside the run."""
+        return self.mttr_sum_s / self.n_repairs if self.n_repairs else 0.0
+
+    @property
+    def capacity_availability(self) -> float:
+        """1 − mean fraction of physical cores dead over the horizon —
+        a pure function of the storm, identical across policies."""
+        denom = self.n_cores_total * self.horizon_s
+        return 1.0 - self.core_downtime_s / denom if denom else 1.0
+
+    @property
+    def service_availability(self) -> float:
+        """Admitted / arrived tenants — the fraction of service asks the
+        cluster actually carried under the storm.  Unlike capacity
+        availability this separates policies: how much of the surviving
+        hardware a policy can still *shape into placements* (vNPU remaps
+        around holes, MIG loses whole partitions)."""
+        return self.n_admitted / self.n_arrived if self.n_arrived else 1.0
+
+    def recovery_summary(self) -> Dict[str, float]:
+        """Flat digest of the chaos-plane recovery SLOs."""
+        return {
+            "mttr_s": round(self.mttr_s, 4),
+            "capacity_availability": round(self.capacity_availability, 6),
+            "service_availability": round(self.service_availability, 4),
+            "repaired_cores": self.n_repaired_cores,
+            "core_downtime_s": round(self.core_downtime_s, 4),
+            "link_faults": self.n_link_faults,
+            "link_repairs": self.n_link_repairs,
+            "link_migrations": self.n_link_migrations,
+            "fault_kills": self.n_fault_kills,
+            "ckpt_resumes": self.n_ckpt_resumes,
+            "rework_s": round(self.rework_s, 4),
+            "rewarm_cost_s": round(self.rewarm_cost_s, 4),
+            "fault_retries": self.n_fault_retries,
+            "fault_drops": self.n_fault_drops,
+            "requests_fault_lost": self.requests_fault_lost,
+        }
+
+    @property
     def sla_goodput_rps(self) -> float:
         """Requests meeting both TTFT and TPOT targets, per second of the
         run horizon — the serving plane's headline axis."""
@@ -318,6 +400,8 @@ class ClusterMetrics:
         }
         if self.n_failed_cores:
             out["failed_cores"] = self.n_failed_cores
+        if self.n_repaired_cores or self.n_link_faults or self.n_fault_kills:
+            out["recovery"] = self.recovery_summary()
         if self.n_evacuated:
             out["evacuated"] = self.n_evacuated
         if self.n_probe_skips:
@@ -348,7 +432,8 @@ class ClusterScheduler:
                  probe_memo: Optional[bool] = None,
                  serving: Optional[ServingConfig] = None,
                  admission: str = "fifo",
-                 defrag_planner: str = "greedy"):
+                 defrag_planner: str = "greedy",
+                 recovery: Optional[RecoveryConfig] = None):
         if rescore not in RESCORE_MODES:
             raise ValueError(
                 f"rescore must be one of {RESCORE_MODES}, got {rescore!r}")
@@ -405,6 +490,14 @@ class ClusterScheduler:
         # tid -> isolated (no-external-load) interval of the cached
         # skeleton — pure function of the placement, invalidated with it
         self._iso_cache: Dict[int, int] = {}
+
+        # chaos plane: recovery semantics (None keeps the historical
+        # fault handling), live link-degradation overlay, per-core
+        # downtime clocks and the serving retry ledger
+        self.recovery = recovery
+        self._degraded_links: Dict[Tuple[int, int], float] = {}
+        self._core_down_since: Dict[int, float] = {}
+        self._retry_attempts: Dict[int, int] = {}
 
         self._residents: Dict[int, ResidentTenant] = {}
         self._failed_cores: set = set()
@@ -480,18 +573,56 @@ class ClusterScheduler:
         kwargs = dict(hbm_concurrency=max(hbm_clients, 1))
         if self.ledger is None:
             if p.comm == "dataflow":
-                kwargs["external_flows"] = [
+                ext_flows = [
                     f for other, r2 in self._residents.items()
                     if other != tid for f in self._tenant_flows(r2)]
+                if self._degraded_links:
+                    # degraded mode: fold the link-degradation overlay
+                    # into pre-aggregated loads (a solo tenant must feel
+                    # a slow link too, so always take the loads path)
+                    base = S.flow_link_loads(self.topo, ext_flows)
+                    own = S.flow_link_loads(self.topo,
+                                            self._tenant_flows(rt))
+                    kwargs["external_link_loads"] = \
+                        self._degraded_loads(base, own)
+                else:
+                    kwargs["external_flows"] = ext_flows
             return S.simulate(rt.graph, list(p.cores), self.topo, self.hw,
                               comm=p.comm, owner=tid,
                               tdm_physical=p.tdm_physical, **kwargs)
-        if p.comm == "dataflow" and self.ledger.has_external(tid):
+        if p.comm == "dataflow" and (self._degraded_links
+                                     or self.ledger.has_external(tid)):
             # pass the (possibly empty) aggregate exactly when the
             # oracle's flow list would be non-empty — the tensor
             # model's contention switch keys on that, not on loads
-            kwargs["external_link_loads"] = self.ledger.external_loads(tid)
+            ext = self.ledger.external_loads(tid)
+            if self._degraded_links:
+                ext = self._degraded_loads(ext, None)
+            kwargs["external_link_loads"] = ext
         return S.rescore_contention(self._skeleton(rt), **kwargs)
+
+    def _degraded_loads(self, base: Dict[Tuple[int, int], float],
+                        own: Optional[Dict[Tuple[int, int], float]]
+                        ) -> Dict[Tuple[int, int], float]:
+        """Re-cost degraded links into a tenant's external-load context: a
+        directed edge at degradation factor ``d`` behaves as if it carried
+        ``d x`` its actual bytes, so we add ``(d-1) x total_edge_bytes`` of
+        phantom external load — inside :func:`~repro.core.simulator.
+        link_contention` the edge then totals exactly ``d x (ext + own)``,
+        the scaled-capacity semantics.  ``own`` is the tenant's own
+        footprint (oracle mode); in ledger mode the ledger's ``link_loads``
+        already hold the all-resident total.  Loads are integer-valued
+        floats, so both derivations are exact and bit-identical."""
+        out = dict(base)
+        for e, d in sorted(self._degraded_links.items()):
+            if own is None:
+                total = self.ledger.link_loads.get(e, 0.0)
+            else:
+                total = base.get(e, 0.0) + own.get(e, 0.0)
+            extra = (d - 1.0) * total
+            if extra > 0.0:
+                out[e] = out.get(e, 0.0) + extra
+        return out
 
     def _rescore(self) -> None:
         """Reference oracle: score every resident against every other —
@@ -956,12 +1087,16 @@ class ClusterScheduler:
             self.metrics.n_defrag_plans += 1
         return moved
 
-    def _fail_cores(self, cores: Sequence[int], now: float) -> None:
+    def _fail_cores(self, cores: Sequence[int], now: float,
+                    evq: Optional[EventQueue] = None) -> None:
         """Dead hardware: quarantine the cores through the policy, then
         live-migrate every resident touching them (``avoid=`` the dead
         set), charging the usual migration pause.  A tenant the policy
         cannot move keeps running degraded on its old cores — the model's
-        stand-in for a stranded tenant awaiting operator action."""
+        stand-in for a stranded tenant awaiting operator action — unless a
+        :class:`RecoveryConfig` is bound, in which case it is killed and
+        recovered (checkpoint resume / retry queue, see
+        :meth:`_fault_kill`)."""
         cores = tuple(int(c) for c in cores)
         self.policy.mark_failed(cores)
         self._placement_version += 1   # quarantine changes what can place
@@ -970,15 +1105,148 @@ class ClusterScheduler:
         newly_dead = set(cores) - self._failed_cores
         self._failed_cores |= newly_dead
         self.metrics.n_failed_cores += len(newly_dead)
+        for c in sorted(newly_dead):
+            self._core_down_since[c] = now    # MTTR clock starts
         dead = set(cores)
         for rt in list(self._residents.values()):
             if not dead & set(rt.placement.cores):
                 continue
             new_p, moved = self.policy.migrate(rt.placement, avoid=cores)
-            if not moved:
+            if moved:
+                rt.placement = new_p
+                self._charge_migration(rt, now)
+            elif self.recovery is not None and evq is not None:
+                self._fault_kill(rt, now, evq)
+
+    def _repair_cores(self, cores: Sequence[int], now: float) -> None:
+        """REPAIR event: return quarantined cores to service through the
+        policy and close their MTTR intervals.  The placement-version bump
+        invalidates the negative-probe memo (repair grows the free pool;
+        for vNPU the canonical free-state token changes with the engine's
+        regions, so stale negative entries can never mask the new
+        capacity)."""
+        back = {int(c) for c in cores} & self._failed_cores
+        if not back:
+            return
+        self.policy.mark_repaired(sorted(back))
+        self._placement_version += 1
+        self._failed_cores -= back
+        self.metrics.n_repaired_cores += len(back)
+        for c in sorted(back):
+            t0 = self._core_down_since.pop(c, None)
+            if t0 is not None:
+                self.metrics.mttr_sum_s += now - t0
+                self.metrics.core_downtime_s += now - t0
+                self.metrics.n_repairs += 1
+
+    def _fault_kill(self, rt: ResidentTenant, now: float,
+                    evq: EventQueue) -> None:
+        """A fault destroyed this tenant's placement and no migration
+        target exists: release it and route it through recovery.  Training
+        tenants re-arrive after the checkpoint-restore pause with the work
+        since their last checkpoint boundary re-added; serving tenants
+        re-arrive through the bounded exponential-backoff retry queue (or
+        are dropped once the budget is exhausted).  Any in-flight requests
+        are lost with the placement and counted."""
+        tid = rt.spec.tid
+        self._residents.pop(tid, None)
+        requests_lost = 0
+        if self.plane is not None and self.plane.is_attached(tid):
+            fold = self.plane.detach(tid)
+            self._fold_records(fold)
+            requests_lost = fold.n_incomplete
+            self._resize_state.pop(tid, None)
+            self._phase_cache.clear()
+        self.policy.release(rt.placement)
+        self._tenant_departed(tid)
+        self.metrics.tenant_iterations[tid] = rt.served_iterations
+        self.metrics.tenant_active_s[tid] = max(now - rt.admit_s, 0.0)
+        self.metrics.n_fault_kills += 1
+        self.metrics.requests_fault_lost += requests_lost
+        rc = self.recovery
+        remaining = max(rt.depart_s - now, 0.0)
+        if rt.spec.tenant_class == "train":
+            # resume from the last periodic checkpoint: the work since
+            # that boundary is redone, and the restore (scratchpad
+            # re-warm + routing-table resharding — the same Fig.-11
+            # arithmetic a migration pays) delays re-entry
+            lost = math.fmod(max(now - rt.admit_s, 0.0),
+                             rc.ckpt_interval_s)
+            restore_s = self.policy.migration_cycles(
+                rt.placement, rt.graph.total_weight_bytes,
+                self.hw.hbm_bytes_per_cycle) / self.hw.freq_hz
+            self.metrics.rework_s += lost
+            self.metrics.rewarm_cost_s += restore_s
+            self.metrics.n_ckpt_resumes += 1
+            back = now + restore_s
+            evq.push(back, ARRIVAL, spec=dataclasses.replace(
+                rt.spec, arrival_s=back, duration_s=remaining + lost))
+        else:
+            attempt = self._retry_attempts.get(tid, 0)
+            if attempt >= rc.retry_max or remaining <= 0.0:
+                self.metrics.n_fault_drops += 1
+                return
+            self._retry_attempts[tid] = attempt + 1
+            back = now + rc.retry_base_s * (2.0 ** attempt)
+            self.metrics.n_fault_retries += 1
+            evq.push(back, ARRIVAL, spec=dataclasses.replace(
+                rt.spec, arrival_s=back, duration_s=remaining))
+
+    # -- NoC-link degraded mode --------------------------------------------
+    def _invalidate_scores(self) -> None:
+        """Link state changed: every resident's contention context is
+        stale (degradation is an overlay on the shared link loads), so
+        force a full rescore whichever scoring mode is active."""
+        self._phase_cache.clear()
+        if self.ledger is not None:
+            self.ledger.invalidate_all()
+        else:
+            self._dirty = True
+
+    def _tenants_on_link(self, link: Tuple[int, int]) -> List[int]:
+        """Resident tids whose own flows cross the directed edge, in tid
+        order — identical in ledger and oracle mode (the ledger's
+        footprints are :func:`~repro.core.simulator.flow_link_loads` of
+        the same cached flows)."""
+        out = []
+        for tid in sorted(self._residents):
+            fp = S.flow_link_loads(
+                self.topo, self._tenant_flows(self._residents[tid]))
+            if fp.get(link):
+                out.append(tid)
+        return out
+
+    def _link_fault(self, ev, now: float) -> None:
+        """LINK_FAIL / LINK_DEGRADE event: install (or worsen) the edge's
+        degradation factor and re-score everyone.  For hard failures with
+        recovery armed, residents whose own traffic crosses the edge are
+        migrated off it (``avoid=`` its endpoints) — re-costing handles
+        the ones that cannot move."""
+        link = (int(ev.link[0]), int(ev.link[1]))
+        factor = float(ev.factor) if ev.factor else 2.0
+        self._degraded_links[link] = max(
+            self._degraded_links.get(link, 1.0), factor)
+        self.metrics.n_link_faults += 1
+        self._invalidate_scores()
+        if ev.kind != LINK_FAIL or self.recovery is None \
+                or not self.recovery.migrate_on_link_fail:
+            return
+        for tid in self._tenants_on_link(link):
+            rt = self._residents.get(tid)
+            if rt is None:
                 continue
-            rt.placement = new_p
-            self._charge_migration(rt, now)
+            new_p, moved = self.policy.migrate(rt.placement, avoid=link)
+            if moved:
+                rt.placement = new_p
+                self._charge_migration(rt, now)
+                self.metrics.n_link_migrations += 1
+
+    def _link_repair(self, ev, now: float) -> None:
+        """LINK_REPAIR event: the edge is back at full bandwidth."""
+        link = (int(ev.link[0]), int(ev.link[1]))
+        if self._degraded_links.pop(link, None) is not None:
+            self.metrics.n_link_repairs += 1
+            self._invalidate_scores()
 
     def _reject(self, spec: TenantSpec, wait_s: float) -> None:
         """A tenant that gave up: censor its wait into the latency metrics
@@ -1090,6 +1358,34 @@ class ClusterScheduler:
         for fail_t, dead in failures:
             self._evq.push(fail_t, FAILURE, cores=tuple(dead))
 
+    def inject_chaos(self, events) -> None:
+        """Queue a fault plan's cluster-scope events (core bursts with
+        their repairs, directed-link failures/stragglers with theirs).
+
+        Duck-typed on ``kind`` / ``t_s`` / ``cores`` / ``link`` /
+        ``factor`` — see :class:`repro.chaos.plan.FaultEvent`; the kind
+        strings are matched literally so :mod:`repro.chaos` never needs
+        to import the scheduler (and vice versa)."""
+        for fe in events:
+            kind = fe.kind
+            if kind == "core-fail":
+                self._evq.push(fe.t_s, FAILURE, cores=tuple(fe.cores))
+            elif kind == "core-repair":
+                self._evq.push(fe.t_s, REPAIR, cores=tuple(fe.cores))
+            elif kind == "link-fail":
+                self._evq.push(fe.t_s, LINK_FAIL, link=tuple(fe.link),
+                               factor=float(fe.factor))
+            elif kind == "link-degrade":
+                self._evq.push(fe.t_s, LINK_DEGRADE, link=tuple(fe.link),
+                               factor=float(fe.factor))
+            elif kind == "link-repair":
+                self._evq.push(fe.t_s, LINK_REPAIR, link=tuple(fe.link))
+            else:
+                raise ValueError(
+                    f"unknown chaos event kind {kind!r} (fleet-scope "
+                    f"events belong to the fleet driver, not the "
+                    f"scheduler)")
+
     def resident_specs(self) -> Dict[int, TenantSpec]:
         """Current residents' specs (router-facing snapshot input)."""
         return {tid: rt.spec for tid, rt in self._residents.items()}
@@ -1178,8 +1474,14 @@ class ClusterScheduler:
                                 and self._placement_version == v0)
                         self._waiting.append((spec, now))
             elif ev.kind == DEPARTURE:
-                rt = self._residents.pop(ev.tid, None)
-                if rt is not None:
+                rt = self._residents.get(ev.tid)
+                # a fault-killed-and-recovered tenant re-enters under its
+                # own tid with a *later* departure — the stale DEPARTURE
+                # from its first life must not clip the resumed one (for
+                # live residents ev.time is exactly rt.depart_s, the very
+                # float this event was pushed with)
+                if rt is not None and rt.depart_s == now:
+                    self._residents.pop(ev.tid)
                     if self.plane is not None and \
                             self.plane.is_attached(ev.tid):
                         self._fold_records(self.plane.detach(ev.tid))
@@ -1193,8 +1495,15 @@ class ClusterScheduler:
                         max(rt.depart_s - rt.admit_s, 0.0)
                 self._drain_queue(now, evq)
             elif ev.kind == FAILURE:
-                self._fail_cores(ev.cores, now)
+                self._fail_cores(ev.cores, now, evq)
                 self._drain_queue(now, evq)
+            elif ev.kind == REPAIR:
+                self._repair_cores(ev.cores, now)
+                self._drain_queue(now, evq)   # repaired capacity admits
+            elif ev.kind in (LINK_FAIL, LINK_DEGRADE):
+                self._link_fault(ev, now)
+            elif ev.kind == LINK_REPAIR:
+                self._link_repair(ev, now)
             elif ev.kind == RESIZE:
                 self._do_resize(ev, now)
                 self._drain_queue(now, evq)   # a shrink freed cores
@@ -1228,6 +1537,13 @@ class ClusterScheduler:
                                    spec.sla_wait_s))
         self._waiting = []
         self.metrics.horizon_s = self._last_t
+        # close still-open core-downtime intervals at the horizon (their
+        # MTTR interval never closed, so only downtime is booked)
+        for c in sorted(self._core_down_since):
+            self.metrics.core_downtime_s += max(
+                self._last_t - self._core_down_since[c], 0.0)
+        self._core_down_since = {}
+        self.metrics.n_cores_total = self.topo.num_nodes
         if self.plane is not None:
             self.metrics.peak_live_records = self.plane.peak_live_records
         counters = getattr(self.policy, "engine_counters", None)

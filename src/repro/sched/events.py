@@ -18,15 +18,24 @@ ARRIVAL = "arrival"
 DEPARTURE = "departure"
 EPOCH = "epoch"
 FAILURE = "failure"               # dead cores: quarantine + migrate residents
+REPAIR = "repair"                 # repaired cores rejoin the free pool
+LINK_FAIL = "link-fail"           # directed NoC link outage (re-costed)
+LINK_DEGRADE = "link-degrade"     # directed NoC link straggler (bandwidth x1/f)
+LINK_REPAIR = "link-repair"       # degraded/failed link back to full speed
 RESIZE = "resize"                 # elastic vNPU grow/shrink (serving plane)
 
-# same-timestamp processing order: free cores, then fail hardware, then
-# observe, then admit, then resize — a departure at the same instant as a
-# failure frees its cores before the quarantine, an arrival sees the
-# post-failure mesh, and a RESIZE pushed by an epoch's pressure check runs
-# after that instant's admissions so growth never races a same-tick
-# arrival for cores
-_KIND_PRIORITY = {DEPARTURE: 0, FAILURE: 1, EPOCH: 2, ARRIVAL: 3, RESIZE: 4}
+# same-timestamp processing order: free cores, then repair hardware, then
+# fail hardware, then settle links, then observe, then admit, then resize —
+# a departure at the same instant as a failure frees its cores before the
+# quarantine, a repair returns capacity before a same-tick arrival asks for
+# it, an arrival sees the post-failure mesh, and a RESIZE pushed by an
+# epoch's pressure check runs after that instant's admissions so growth
+# never races a same-tick arrival for cores.  Only the *relative* order of
+# kinds matters (priority breaks same-timestamp ties), so inserting the
+# chaos kinds leaves every fault-free trajectory bit-identical.
+_KIND_PRIORITY = {DEPARTURE: 0, REPAIR: 1, FAILURE: 2, LINK_REPAIR: 3,
+                  LINK_FAIL: 4, LINK_DEGRADE: 5, EPOCH: 6, ARRIVAL: 7,
+                  RESIZE: 8}
 
 
 @dataclasses.dataclass
@@ -37,6 +46,10 @@ class TenantSpec:
     a config-derived serving model from :mod:`repro.sched.traces`).
     ``sla_wait_s`` is the admission SLA: the tenant abandons the queue (a
     rejected request) if not placed within that long of arriving.
+    ``tenant_class`` selects the fault-recovery path: ``"train"`` tenants
+    killed by a fault resume from their last periodic checkpoint (restore
+    pause charged), anything else re-admits through the bounded-backoff
+    retry queue.
     """
     tid: int
     model: str
@@ -46,14 +59,17 @@ class TenantSpec:
     memory_bytes: int = 64 << 20
     bandwidth_cap: Optional[int] = None
     sla_wait_s: float = math.inf
+    tenant_class: str = "serve"
 
 
 @dataclasses.dataclass(order=True)
 class Event:
     """One scheduled occurrence.  ``time`` is wall-clock seconds; the
     payload fields per kind: ``spec`` (arrival), ``tid`` (departure),
-    ``cores`` (failure — the physical core ids that died) or
-    ``tid`` + ``n_cores`` (resize — the elastic target size)."""
+    ``cores`` (failure/repair — the physical core ids that died or came
+    back), ``tid`` + ``n_cores`` (resize — the elastic target size) or
+    ``link`` + ``factor`` (link fault — a directed NoC edge and its
+    bandwidth-degradation factor)."""
     time: float
     priority: int
     seq: int
@@ -62,6 +78,8 @@ class Event:
     tid: Optional[int] = dataclasses.field(compare=False, default=None)
     cores: Optional[tuple] = dataclasses.field(compare=False, default=None)
     n_cores: Optional[int] = dataclasses.field(compare=False, default=None)
+    link: Optional[tuple] = dataclasses.field(compare=False, default=None)
+    factor: Optional[float] = dataclasses.field(compare=False, default=None)
 
 
 class EventQueue:
@@ -76,11 +94,13 @@ class EventQueue:
              spec: Optional[TenantSpec] = None,
              tid: Optional[int] = None,
              cores: Optional[tuple] = None,
-             n_cores: Optional[int] = None) -> Event:
+             n_cores: Optional[int] = None,
+             link: Optional[tuple] = None,
+             factor: Optional[float] = None) -> Event:
         """Schedule ``kind`` at ``time`` (seconds) with its payload."""
-        ev = Event(time=time, priority=_KIND_PRIORITY.get(kind, 9),
+        ev = Event(time=time, priority=_KIND_PRIORITY.get(kind, 99),
                    seq=next(self._seq), kind=kind, spec=spec, tid=tid,
-                   cores=cores, n_cores=n_cores)
+                   cores=cores, n_cores=n_cores, link=link, factor=factor)
         heapq.heappush(self._heap, ev)
         return ev
 

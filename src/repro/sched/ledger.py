@@ -223,6 +223,12 @@ class InterferenceLedger:
         self.counters.global_invalidations += 1
         self._mark_dirty(self._footprints)
 
+    def invalidate_all(self) -> None:
+        """External context change the ledger cannot see link-by-link (a
+        NoC link failed, degraded or was repaired): every resident's
+        contention context is stale, so mark them all for re-simulation."""
+        self._dirty_all()
+
     # -- verification (tests / --gate) ---------------------------------------
     def oracle_link_loads(self, flows_by_tid: Dict[int, Sequence[Flow]]
                           ) -> Dict[Edge, float]:

@@ -15,9 +15,10 @@ implementations adapt the core allocators:
   global memory (the HBM-contended baseline); defragmentation is
   pointless (no topology), but dead cores are swapped for free ones.
 
-All three implement ``mark_failed`` (quarantine: vNPU per-core via the
-hypervisor, MIG per-partition, UVM per-core), so failure injection in the
-cluster loop is meaningful for every policy.
+All three implement ``mark_failed`` / ``mark_repaired`` (quarantine and
+recovery: vNPU per-core via the hypervisor, MIG per-partition, UVM
+per-core), so failure injection *and* repair in the cluster loop are
+meaningful for every policy.
 
 ``utilization()`` is comparable across policies: fraction of physical
 cores doing *useful* work.  For vNPU/UVM this equals allocated/total
@@ -108,6 +109,12 @@ class PlacementPolicy:
         """Dead hardware: quarantine the cores so nothing is placed on them
         again.  Policies without that notion ignore the report; callers
         should still ``migrate(placement, avoid=cores)`` affected tenants."""
+
+    def mark_repaired(self, cores: Sequence[int]) -> None:
+        """Repaired hardware: lift the quarantine so the cores are
+        allocatable again.  Policies without a quarantine notion ignore the
+        report; callers must invalidate any placement-feasibility memos
+        they hold (repair grows the free pool)."""
 
     def resize(self, placement: Placement,
                new_n_cores: int) -> Tuple[Placement, bool]:
@@ -228,9 +235,14 @@ class VNPUPolicy(PlacementPolicy):
 
     def mark_failed(self, cores: Sequence[int]) -> None:
         """Quarantine dead cores in the hypervisor: they leave the free
-        pool permanently and never rejoin it, even after their tenant
-        migrates away or is destroyed."""
+        pool until repaired, even after their tenant migrates away or is
+        destroyed."""
         self.hyp.mark_failed(cores)
+
+    def mark_repaired(self, cores: Sequence[int]) -> None:
+        """Un-quarantine repaired cores (unowned ones rejoin the engine's
+        free regions immediately; owned ones at their tenant's release)."""
+        self.hyp.mark_repaired(cores)
 
     def engine_counters(self) -> Dict[str, float]:
         """MappingEngine telemetry snapshot (cache hits/misses, escalations,
@@ -362,8 +374,13 @@ class MIGPolicy(PlacementPolicy):
 
     def mark_failed(self, cores: Sequence[int]) -> None:
         """Dead cores poison their whole partition (MIG has no finer
-        quarantine granularity): it is never allocated again."""
+        quarantine granularity): it is not allocated again until every
+        dead core inside it is repaired."""
         self.mig.mark_failed(cores)
+
+    def mark_repaired(self, cores: Sequence[int]) -> None:
+        """Un-poison partitions whose dead cores have all come back."""
+        self.mig.mark_repaired(cores)
 
     def migrate(self, placement: Placement,
                 avoid: Sequence[int] = ()) -> Tuple[Placement, bool]:
@@ -421,8 +438,12 @@ class UVMPolicy(PlacementPolicy):
         self._unregister(placement)
 
     def mark_failed(self, cores: Sequence[int]) -> None:
-        """Quarantine dead cores: they never rejoin the free pool."""
+        """Quarantine dead cores until repaired."""
         self.uvm.mark_failed(cores)
+
+    def mark_repaired(self, cores: Sequence[int]) -> None:
+        """Lift the quarantine: repaired unowned cores are free again."""
+        self.uvm.mark_repaired(cores)
 
     def migrate(self, placement: Placement,
                 avoid: Sequence[int] = ()) -> Tuple[Placement, bool]:

@@ -141,6 +141,11 @@ class ServerFold:
     censored_tokens: int                     # tokens by incomplete requests
     kv_stats: KVStats
     n_dropped: int
+    # requests still in flight at detach (queued + prefilling + decoding,
+    # excluding drops) — what a fault kill loses; identical between the
+    # engines: in record mode it is the not-completed records minus the
+    # drops, which is exactly the live pending/prefill/active census
+    n_incomplete: int = 0
 
 
 @dataclasses.dataclass
@@ -600,14 +605,20 @@ class _VectorPool:
                 records=records, n_requests=len(records),
                 censored_tokens=sum(rec.tokens_out for rec in records
                                     if not rec.completed),
-                kv_stats=row.kv.stats, n_dropped=row.n_dropped)
+                kv_stats=row.kv.stats, n_dropped=row.n_dropped,
+                n_incomplete=sum(1 for rec in records
+                                 if not rec.completed) - row.n_dropped)
         else:
             censored = sum(int(float(self.prod[r, pos]))
                            for pos in range(int(self.n_act[r])))
+            n_prefill = (len(row.prefill_entries)
+                         if row.prefill_entries is not None else 0)
             fold = ServerFold(
                 records=None, n_requests=len(row.stream),
                 censored_tokens=censored,
-                kv_stats=row.kv.stats, n_dropped=row.n_dropped)
+                kv_stats=row.kv.stats, n_dropped=row.n_dropped,
+                n_incomplete=(int(self.n_act[r]) + len(row.pending)
+                              + n_prefill))
         row.kv.release_all()
         row.slots = []
         row.pending.clear()
@@ -1087,4 +1098,6 @@ class ServingPlane:
             n_requests=len(records),
             censored_tokens=sum(rec.tokens_out for rec in records
                                 if not rec.completed),
-            kv_stats=server.kv.stats, n_dropped=server.n_dropped)
+            kv_stats=server.kv.stats, n_dropped=server.n_dropped,
+            n_incomplete=sum(1 for rec in records
+                             if not rec.completed) - server.n_dropped)

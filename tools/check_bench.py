@@ -1,8 +1,8 @@
 """Bench-record lint: BENCH_cluster_sim.json must stay machine-checkable.
 
 The benchmark scripts (``benchmarks/cluster_sim.py``, ``serving_sim.py``,
-``fleet_sim.py`` and ``mapping_engine.py --gap-gate``) all merge their
-results into one ledger file via ``_write_bench``.  CI and the docs quote
+``fleet_sim.py``, ``chaos_sim.py`` and ``mapping_engine.py --gap-gate``)
+all merge their results into one ledger file via ``_write_bench``.  CI and the docs quote
 numbers straight out of that file, so a malformed merge (NaN wall-times,
 a gate slot without a verdict, an entry that lost its mesh key) silently
 poisons every downstream claim.  This lint validates the record:
@@ -36,10 +36,11 @@ BENCH_PATH = ROOT / "BENCH_cluster_sim.json"
 MESH_RE = r"^\d+x\d+(x\d+)?(-[a-z][a-z-]*)?$"
 
 # traces written by the benchmark scripts; "gap-corpus" is the synthetic
-# corpus label used by mapping_engine.py --gap-gate
+# corpus label used by mapping_engine.py --gap-gate, "chaos-mixed" the
+# train-marked mixed trace chaos_sim.py replays under its fault storm
 KNOWN_TRACES = frozenset({
     "bursty", "fleet-serving", "large", "mixed", "pod-mixed",
-    "pod-serving", "serving", "small", "gap-corpus",
+    "pod-serving", "serving", "small", "gap-corpus", "chaos-mixed",
 })
 
 
