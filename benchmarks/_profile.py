@@ -1,4 +1,4 @@
-"""Shared ``--profile`` support for the benchmark CLIs.
+"""Shared ``--profile`` / ``--profile-out`` support for the benchmark CLIs.
 
 Wraps a run in :mod:`cProfile` and prints the top cumulative hotspots, so
 perf PRs start from measurements instead of guesses:
@@ -6,10 +6,16 @@ perf PRs start from measurements instead of guesses:
     PYTHONPATH=src python benchmarks/serving_sim.py --profile ...
     PYTHONPATH=src python benchmarks/cluster_sim.py --profile ...
     PYTHONPATH=src python benchmarks/fleet_sim.py   --profile ...
+    PYTHONPATH=src python benchmarks/chaos_sim.py   --profile ...
 
-The CLIs use the re-entry pattern: parse args, and when ``--profile`` is
-set, re-invoke their own ``main`` (flag stripped) inside ``profiled()`` —
-every code path of the benchmark is covered without restructuring it.
+``--profile-out FILE`` additionally dumps the raw :mod:`pstats` data for
+offline analysis (``snakeviz FILE`` / ``pstats.Stats(FILE)``).
+
+The CLIs use the re-entry pattern: parse args, and when profiling is
+requested, re-invoke their own ``main`` (flags stripped) through
+:func:`run_profiled` — every code path of the benchmark is covered
+without restructuring it, and the child run's exit code propagates so a
+profiled gate still fails CI when the gate fails.
 """
 from __future__ import annotations
 
@@ -17,16 +23,19 @@ import contextlib
 import cProfile
 import pstats
 import sys
-from typing import Iterator, List, Optional, Sequence
+from typing import Callable, Iterator, List, Optional, Sequence
 
 #: how many cumulative-time rows the report prints
 TOP_N = 20
 
 
 @contextlib.contextmanager
-def profiled(top_n: int = TOP_N, stream=None) -> Iterator[cProfile.Profile]:
+def profiled(top_n: int = TOP_N, stream=None,
+             profile_out: Optional[str] = None
+             ) -> Iterator[cProfile.Profile]:
     """Profile the with-block and print the ``top_n`` hottest functions by
-    cumulative time (file/line noise stripped) when it exits."""
+    cumulative time (file/line noise stripped) when it exits; dump the raw
+    pstats data to ``profile_out`` when given."""
     prof = cProfile.Profile()
     prof.enable()
     try:
@@ -38,9 +47,43 @@ def profiled(top_n: int = TOP_N, stream=None) -> Iterator[cProfile.Profile]:
               file=out)
         stats = pstats.Stats(prof, stream=out)
         stats.strip_dirs().sort_stats("cumulative").print_stats(top_n)
+        if profile_out:
+            prof.dump_stats(profile_out)
+            print(f"raw profile written to {profile_out}", file=out)
+
+
+def run_profiled(main_fn: Callable[[List[str]], Optional[int]],
+                 argv: List[str],
+                 profile_out: Optional[str] = None) -> int:
+    """Re-enter ``main_fn(argv)`` under the profiler and return the child
+    run's exit code (``None`` normalized to 0), so profiled gate runs keep
+    their pass/fail semantics."""
+    with profiled(profile_out=profile_out):
+        rc = main_fn(argv)
+    return 0 if rc is None else int(rc)
+
+
+def strip_profile_flags(argv: Optional[Sequence[str]]) -> List[str]:
+    """The argv to re-enter ``main`` with: ``--profile`` and
+    ``--profile-out FILE`` (either spelling) removed."""
+    args = list(argv) if argv is not None else sys.argv[1:]
+    out: List[str] = []
+    skip = False
+    for a in args:
+        if skip:
+            skip = False
+            continue
+        if a == "--profile":
+            continue
+        if a == "--profile-out":
+            skip = True
+            continue
+        if a.startswith("--profile-out="):
+            continue
+        out.append(a)
+    return out
 
 
 def strip_profile_flag(argv: Optional[Sequence[str]]) -> List[str]:
-    """The argv to re-enter ``main`` with: ``--profile`` removed."""
-    args = list(argv) if argv is not None else sys.argv[1:]
-    return [a for a in args if a != "--profile"]
+    """Back-compat alias for :func:`strip_profile_flags`."""
+    return strip_profile_flags(argv)

@@ -44,8 +44,13 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 from repro.chaos import STORMS, make_fault_plan       # noqa: E402
 from repro.core import mesh_2d                        # noqa: E402
 from repro.core import simulator as S                 # noqa: E402
+from repro.obs.registry import (MetricsRegistry,      # noqa: E402
+                                collect_cluster)
+from repro.obs.trace import Tracer                    # noqa: E402
 from repro.sched import (ClusterScheduler, RecoveryConfig,  # noqa: E402
                          TRACES, make_policy, make_trace)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 from cluster_sim import BENCH_PATH, _write_bench      # noqa: E402
 
@@ -79,13 +84,14 @@ def chaos_trace(name: str = "mixed", seed: int = GATE_SEED,
 
 
 def run_storm(policy_name, trace, plan, trace_name="mixed",
-              rescore="ledger", epoch_s=2.0):
+              rescore="ledger", epoch_s=2.0, tracer=None):
     """One policy through one storm: fresh scheduler, recovery armed,
     fault plan injected up front (the event queue interleaves faults,
     repairs and arrivals deterministically)."""
     policy = make_policy(policy_name, mesh_2d(plan.rows, plan.cols))
     sched = ClusterScheduler(policy, hw=S.SIM_CONFIG, epoch_s=epoch_s,
-                             rescore=rescore, recovery=RecoveryConfig())
+                             rescore=rescore, recovery=RecoveryConfig(),
+                             tracer=tracer)
     t0 = time.perf_counter()
     sched.begin(trace_name=trace_name)
     sched.feed(trace)
@@ -130,8 +136,11 @@ def _bench_entry(policy_name, m, wall_s, storm):
     }
 
 
-def run_chaos_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
-    """The pinned-storm SLO gate (see the module docstring)."""
+def run_chaos_gate(json_out: bool, bench_out=BENCH_PATH,
+                   trace_out=None, metrics_out=None) -> int:
+    """The pinned-storm SLO gate (see the module docstring).  With
+    ``--trace-out`` / ``--metrics-out`` the vNPU replay run is traced, so
+    the replay bit-identity check doubles as the tracing-purity check."""
     plan = make_fault_plan(*GATE_MESH, GATE_HORIZON, seed=GATE_SEED,
                            profile=GATE_STORM)
     trace = chaos_trace()
@@ -144,10 +153,25 @@ def run_chaos_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
     entries = []
     runs = {}
     ok = True
+    observe = bool(trace_out or metrics_out)
     for name in GATE_POLICIES:
         m1, w1 = run_storm(name, trace, plan)
-        m2, _ = run_storm(name, trace, plan)
+        tracer = None
+        if observe and name == "vnpu":
+            tracer = Tracer()
+            tracer.process_name(
+                f"vnpu {GATE_MESH[0]}x{GATE_MESH[1]} {GATE_STORM}")
+        m2, _ = run_storm(name, trace, plan, tracer=tracer)
         replay_ok = chaos_digest(m1) == chaos_digest(m2)
+        if tracer is not None:
+            report["trace_events"] = len(tracer)
+            report["trace_dropped"] = tracer.dropped
+            if trace_out:
+                tracer.write(trace_out)
+            if metrics_out:
+                reg = MetricsRegistry()
+                collect_cluster(reg, m2)
+                reg.write_json(metrics_out)
         runs[name] = m1
         rec = m1.recovery_summary()
         conserved = m1.n_arrived == m1.n_admitted + m1.n_rejected
@@ -219,11 +243,30 @@ def main(argv=None) -> int:
                     help="CI mode: pinned-storm replay/SLO gate")
     ap.add_argument("--bench-out", default=str(BENCH_PATH),
                     help="where --gate merges its BENCH record")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in cProfile and print the top-20 "
+                         "cumulative hotspots")
+    ap.add_argument("--profile-out", default=None, metavar="FILE",
+                    help="dump the raw cProfile pstats data to FILE "
+                         "(implies --profile)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run (fault/repair windows as chaos-category "
+                         "spans)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the unified metrics-registry snapshot "
+                         "as JSON")
     ap.add_argument("--json", action="store_true", help="machine output")
     args = ap.parse_args(argv)
 
+    if args.profile or args.profile_out:
+        from _profile import run_profiled, strip_profile_flags
+        return run_profiled(main, strip_profile_flags(argv),
+                            args.profile_out)
+
     if args.gate:
-        return run_chaos_gate(args.json, args.bench_out)
+        return run_chaos_gate(args.json, args.bench_out,
+                              args.trace_out, args.metrics_out)
 
     try:
         rows, cols = (int(x) for x in args.mesh.split(","))
@@ -239,10 +282,25 @@ def main(argv=None) -> int:
     plan = make_fault_plan(rows, cols, args.horizon, seed=args.seed,
                            profile=args.storm)
 
+    obs_tracer = Tracer() if args.trace_out else Tracer.NULL
+    reg = MetricsRegistry() if args.metrics_out else None
     results = []
-    for name in policies:
-        metrics, wall = run_storm(name, trace, plan, trace_name=args.trace)
+    for i, name in enumerate(policies):
+        tracer = None
+        if args.trace_out:
+            tracer = Tracer(pid=i)
+            tracer.process_name(f"{name} {rows}x{cols} {args.storm}")
+        metrics, wall = run_storm(name, trace, plan, trace_name=args.trace,
+                                  tracer=tracer)
         results.append((metrics, wall))
+        if tracer is not None:
+            obs_tracer.absorb(tracer.drain())
+        if reg is not None:
+            collect_cluster(reg, metrics, prefix=f"cluster_{name}")
+    if args.trace_out:
+        obs_tracer.write(args.trace_out)
+    if reg is not None:
+        reg.write_json(args.metrics_out)
 
     if args.json:
         print(json.dumps({

@@ -54,6 +54,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import mesh_2d                       # noqa: E402
 from repro.core import simulator as S                # noqa: E402
+from repro.obs.registry import (MetricsRegistry,     # noqa: E402
+                                collect_cluster)
+from repro.obs.trace import Tracer                   # noqa: E402
 from repro.sched import (ClusterScheduler, TRACES, make_policy,  # noqa: E402
                          make_trace)
 from repro.sched.defrag import DEFRAG_PLANNERS       # noqa: E402
@@ -73,6 +76,9 @@ POD_GATE_HORIZON = 90.0   # the full pod trace: the deep-queue tail is
 POD_GATE_SPEEDUP = 1.25   # fast-path vs oracle end-to-end wall-time floor
 POD_GATE_MS_PER_EVENT = 250.0   # absolute event-loop budget (CI machines
                                 # vary; this PR measures ~54 ms/event)
+# tracing is a pure observer: the traced replay must stay bit-identical
+# and cost at most this factor of the untraced fast path's wall time
+TRACE_OVERHEAD_MAX = 1.15
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_cluster_sim.json"
 
@@ -174,17 +180,37 @@ def _gate_pair(trace, trace_name, mesh):
     return runs
 
 
-def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
+def _traced_run(trace, trace_name, mesh):
+    """One extra fast-path run with the span tracer armed (pure observer:
+    the trajectory must match the untraced run exactly)."""
+    tracer = Tracer()
+    tracer.process_name(f"vnpu {mesh[0]}x{mesh[1]} {trace_name}")
+    policy = make_policy("vnpu", mesh_2d(*mesh))
+    sched = ClusterScheduler(policy, hw=S.SIM_CONFIG, epoch_s=2.0,
+                             rescore="ledger", tracer=tracer)
+    t0 = time.perf_counter()
+    metrics = sched.run(trace, trace_name=trace_name)
+    return tracer, metrics, time.perf_counter() - t0
+
+
+def run_gate(json_out: bool, bench_out=BENCH_PATH,
+             trace_out=None, metrics_out=None) -> int:
     """16x16 ledger-vs-oracle gate: bit-identical scores, >= 5x cheaper
-    scoring passes; writes the BENCH record."""
+    scoring passes; writes the BENCH record.  ``--trace-out`` adds a
+    traced replay of the first gate trace (the obs-gate: its trajectory
+    must stay bit-identical with tracing on) and writes the Chrome
+    trace-event JSON; ``--metrics-out`` writes the registry snapshot."""
     report = {"mesh": list(GATE_MESH), "speedup_floor": GATE_SPEEDUP,
               "traces": []}
     bench_entries = []
     ok = True
+    first = None           # (trace, ledger metrics) of the first gate trace
     for trace_name, horizon in GATE_TRACES:
         trace = make_trace(trace_name, horizon_s=horizon)
         runs = _gate_pair(trace, trace_name, GATE_MESH)
         ledger, oracle = runs["ledger"][0], runs["oracle"][0]
+        if first is None:
+            first = (trace, ledger)
         identical = _trajectory(ledger) == _trajectory(oracle)
         speedup = oracle.median_scoring_ms / max(ledger.median_scoring_ms,
                                                  1e-9)
@@ -208,11 +234,36 @@ def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
         for mode in ("ledger", "oracle"):
             bench_entries.append(_bench_entry(
                 trace_name, GATE_MESH, mode, *runs[mode]))
+    if trace_out or metrics_out:
+        trace_name = GATE_TRACES[0][0]
+        tracer, t_metrics, t_wall = _traced_run(first[0], trace_name,
+                                                GATE_MESH)
+        identical = _trajectory(t_metrics) == _trajectory(first[1])
+        report["observability"] = {
+            "trace": trace_name,
+            "trace_identical": identical,
+            "trace_events": len(tracer),
+            "trace_dropped": tracer.dropped,
+            "traced_wall_s": round(t_wall, 2),
+        }
+        ok = ok and identical
+        if trace_out:
+            tracer.write(trace_out)
+        if metrics_out:
+            reg = MetricsRegistry()
+            collect_cluster(reg, t_metrics)
+            reg.write_json(metrics_out)
     report["gate_ok"] = ok
     _write_bench("16x16", report, bench_entries, bench_out)
     if json_out:
         print(json.dumps(report, indent=2))
     else:
+        if "observability" in report:
+            o = report["observability"]
+            print(f"obs: traced replay of {o['trace']} "
+                  f"{'bit-identical' if o['trace_identical'] else 'DIVERGED'}"
+                  f" ({o['trace_events']} events, "
+                  f"{o['trace_dropped']} dropped)")
         for e in report["traces"]:
             print(f"{e['trace']}: ledger {e['ledger_median_scoring_ms']}ms "
                   f"vs oracle {e['oracle_median_scoring_ms']}ms per pass "
@@ -224,17 +275,26 @@ def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
     return 0 if ok else 1
 
 
-def run_pod_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
+def run_pod_gate(json_out: bool, bench_out=BENCH_PATH,
+                 trace_out=None, metrics_out=None) -> int:
     """Budgeted 32x32 gate: the full fast path (ledger + probe memo +
     split-RunReport + symmetry cache) must replay ``pod-mixed`` with a
     trajectory bit-identical to the oracle path's and an end-to-end
-    event-loop wall time >= POD_GATE_SPEEDUP x cheaper."""
+    event-loop wall time >= POD_GATE_SPEEDUP x cheaper.  A third run with
+    the span tracer armed must stay bit-identical and inside the
+    TRACE_OVERHEAD_MAX wall-time ratio (recorded in BENCH)."""
     trace = make_trace(POD_GATE_TRACE, horizon_s=POD_GATE_HORIZON)
     runs = _gate_pair(trace, POD_GATE_TRACE, POD_GATE_MESH)
     fast, oracle = runs["ledger"], runs["oracle"]
     identical = _trajectory(fast[0]) == _trajectory(oracle[0])
     speedup = oracle[1] / max(fast[1], 1e-9)
     ms_per_event = fast[1] / max(fast[0].n_events, 1) * 1e3
+    tracer, t_metrics, t_wall = _traced_run(trace, POD_GATE_TRACE,
+                                            POD_GATE_MESH)
+    trace_identical = _trajectory(t_metrics) == _trajectory(fast[0])
+    trace_overhead = t_wall / max(fast[1], 1e-9)
+    reg = MetricsRegistry()
+    collect_cluster(reg, t_metrics)
     report = {
         "mesh": list(POD_GATE_MESH),
         "trace": POD_GATE_TRACE,
@@ -249,12 +309,31 @@ def run_pod_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
         "ms_per_event_budget": POD_GATE_MS_PER_EVENT,
         "probe_skips": fast[0].n_probe_skips,
         "engine": fast[0].engine_counters,
+        "traced_wall_s": round(t_wall, 2),
+        "trace_overhead_ratio": round(trace_overhead, 3),
+        "trace_overhead_max": TRACE_OVERHEAD_MAX,
+        "trace_identical": trace_identical,
+        "trace_events": len(tracer),
+        "trace_dropped": tracer.dropped,
         "gate_ok": (identical and speedup >= POD_GATE_SPEEDUP
-                    and ms_per_event <= POD_GATE_MS_PER_EVENT),
+                    and ms_per_event <= POD_GATE_MS_PER_EVENT
+                    and trace_identical
+                    and trace_overhead <= TRACE_OVERHEAD_MAX),
     }
+    if trace_out:
+        tracer.write(trace_out)
+    if metrics_out:
+        reg.write_json(metrics_out)
+    traced_entry = _bench_entry(POD_GATE_TRACE, POD_GATE_MESH,
+                                "ledger-traced", t_metrics, t_wall)
+    traced_entry["trace_overhead_ratio"] = round(trace_overhead, 3)
+    traced_entry["trace_events"] = len(tracer)
+    # the unified registry snapshot rides along in the BENCH record
+    # (tools/check_bench.py lints it: unique names, finite values)
+    traced_entry["metrics"] = reg.snapshot()
     _write_bench("32x32", report, [
         _bench_entry(POD_GATE_TRACE, POD_GATE_MESH, m, *runs[m])
-        for m in ("ledger", "oracle")], bench_out)
+        for m in ("ledger", "oracle")] + [traced_entry], bench_out)
     if json_out:
         print(json.dumps(report, indent=2))
     else:
@@ -266,7 +345,12 @@ def run_pod_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
               f"(floor {POD_GATE_SPEEDUP}x), "
               f"{report['fast_ms_per_event']}ms/event "
               f"(budget {POD_GATE_MS_PER_EVENT}), trajectories "
-              f"{'bit-identical' if identical else 'DIVERGED'} -> "
+              f"{'bit-identical' if identical else 'DIVERGED'}, traced "
+              f"{report['traced_wall_s']}s = "
+              f"{report['trace_overhead_ratio']}x "
+              f"(max {TRACE_OVERHEAD_MAX}x, "
+              f"{'bit-identical' if trace_identical else 'DIVERGED'}, "
+              f"{report['trace_events']} events) -> "
               f"{'OK' if report['gate_ok'] else 'FAIL'}")
     return 0 if report["gate_ok"] else 1
 
@@ -368,14 +452,24 @@ def main(argv=None) -> int:
     ap.add_argument("--profile", action="store_true",
                     help="cProfile the run and print the top-20 "
                          "cumulative hotspots")
+    ap.add_argument("--profile-out", default=None, metavar="FILE",
+                    help="dump the raw cProfile pstats data to FILE "
+                         "(implies --profile)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run (sim-time spans; pure observer — "
+                         "trajectories are unchanged)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the unified metrics-registry snapshot "
+                         "as JSON")
     ap.add_argument("--json", action="store_true", help="machine output")
     args = ap.parse_args(argv)
 
-    if args.profile:
+    if args.profile or args.profile_out:
         sys.path.insert(0, str(Path(__file__).resolve().parent))
-        from _profile import profiled, strip_profile_flag
-        with profiled():
-            return main(strip_profile_flag(argv))
+        from _profile import run_profiled, strip_profile_flags
+        return run_profiled(main, strip_profile_flags(argv),
+                            args.profile_out)
 
     try:
         rows, cols = (int(x) for x in args.mesh.split(","))
@@ -384,12 +478,14 @@ def main(argv=None) -> int:
 
     if args.gate:
         if (rows, cols) == tuple(POD_GATE_MESH):
-            return run_pod_gate(args.json, args.bench_out)
+            return run_pod_gate(args.json, args.bench_out,
+                                args.trace_out, args.metrics_out)
         if (rows, cols) not in ((6, 6), tuple(GATE_MESH)):
             ap.error(f"--gate runs fixed configurations: the 16x16 gate "
                      f"(default; --mesh 16,16) or the pod gate "
                      f"(--mesh 32,32) — got --mesh {args.mesh!r}")
-        return run_gate(args.json, args.bench_out)
+        return run_gate(args.json, args.bench_out,
+                        args.trace_out, args.metrics_out)
 
     policies = [p.strip() for p in args.policy.split(",") if p.strip()]
     try:
@@ -417,20 +513,37 @@ def main(argv=None) -> int:
             args.failure_rate, horizon, rows * cols,
             seed=args.seed if args.seed is not None else TRACES[args.trace].seed)
 
+    # one tracer per policy run (pid = policy index) merged into one file
+    obs_tracer = Tracer() if args.trace_out else Tracer.NULL
     results = []
-    for name in policies:
+    for i, name in enumerate(policies):
         kwargs = {"heat_aware": True} if (
             name == "vnpu" and args.heat_aware) else {}
         policy = make_policy(name, mesh_2d(rows, cols), **kwargs)
+        tracer = None
+        if args.trace_out:
+            tracer = Tracer(pid=i)
+            tracer.process_name(f"{name} {rows}x{cols}")
         sched = ClusterScheduler(policy, hw=S.SIM_CONFIG,
                                  epoch_s=args.epoch,
                                  defrag=not args.no_defrag,
                                  defrag_planner=args.defrag_planner,
-                                 rescore=args.rescore)
+                                 rescore=args.rescore,
+                                 tracer=tracer)
         t0 = time.perf_counter()
         metrics = sched.run(trace, trace_name=args.trace, failures=failures)
         wall = time.perf_counter() - t0
         results.append((metrics, wall))
+        if tracer is not None:
+            obs_tracer.absorb(tracer.drain())
+
+    if args.trace_out:
+        obs_tracer.write(args.trace_out)
+    if args.metrics_out:
+        reg = MetricsRegistry()
+        for m, _ in results:
+            collect_cluster(reg, m, prefix=f"cluster_{m.policy}")
+        reg.write_json(args.metrics_out)
 
     by_name = {m.policy: m for m, _ in results}
     claims = {}

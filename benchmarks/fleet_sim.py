@@ -43,6 +43,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 from cluster_sim import BENCH_PATH, _write_bench          # noqa: E402
 from repro.fleet import (Fleet, FleetConfig, PodSpec,     # noqa: E402
                          ROUTING_POLICIES, Scenario, fleet_trace)
+from repro.obs.registry import MetricsRegistry, collect_fleet  # noqa: E402
+from repro.obs.trace import DEFAULT_CAPACITY              # noqa: E402
 
 GATE_PODS = 8
 GATE_MESH = (16, 16)
@@ -90,14 +92,16 @@ def build_pods(n, rows, cols):
 
 def run_fleet(pods, *, seed=0, window_s=5.0, routing="least-loaded",
               rate_scale=1.0, horizon_s=None, record=False, workers=1,
-              scenarios=()):
-    """One fleet run: fresh Fleet + trace, returns FleetMetrics."""
+              scenarios=(), trace_capacity=0):
+    """One fleet run: fresh Fleet + trace, returns (FleetMetrics, Fleet).
+    ``trace_capacity > 0`` arms the per-pod span tracers; the merged
+    Chrome trace is on the returned Fleet's ``tracer``."""
     cfg = FleetConfig(seed=seed, window_s=window_s, routing=routing,
                       trace_name=GATE_TRACE, record_requests=record,
-                      rate_scale=rate_scale)
+                      rate_scale=rate_scale, trace_capacity=trace_capacity)
     fleet = Fleet(pods, cfg)
     trace = fleet_trace(len(pods), seed=seed, horizon_s=horizon_s)
-    return fleet.run(trace, scenarios=scenarios, workers=workers)
+    return fleet.run(trace, scenarios=scenarios, workers=workers), fleet
 
 
 def _print_summary(m):
@@ -144,17 +148,24 @@ def _bench_entry(mode, m, extra=None):
     return entry
 
 
-def _identity_check():
+def _identity_check(trace_out=None, metrics_out=None):
     """Serial vs parallel on the heterogeneous 3-pod fleet, full request
-    logs, an upgrade AND a pod failure mid-trace."""
+    logs, an upgrade AND a pod failure mid-trace.  With ``--trace-out`` /
+    ``--metrics-out`` the parallel run is traced, so the bit-identity
+    check doubles as the tracing-purity check, and the merged
+    trace/metrics are written out."""
+    observe = bool(trace_out or metrics_out)
     runs = {}
+    fleets = {}
     for workers in (1, 2):
-        runs[workers] = run_fleet(
+        runs[workers], fleets[workers] = run_fleet(
             list(IDENTITY_PODS), seed=7, horizon_s=IDENTITY_HORIZON_S,
             record=True, workers=workers,
-            scenarios=list(IDENTITY_SCENARIOS))
+            scenarios=list(IDENTITY_SCENARIOS),
+            trace_capacity=DEFAULT_CAPACITY if (
+                observe and workers == 2) else 0)
     a, b = runs[1], runs[2]
-    return {
+    out = {
         "pods": len(IDENTITY_PODS),
         "digests_identical": a.pod_digests() == b.pod_digests(),
         "summaries_identical": a.serving_summary() == b.serving_summary(),
@@ -163,11 +174,22 @@ def _identity_check():
         "migrations": a.serving_summary()["migrations"],
         "switch_transfers": a.serving_summary()["switch"]["n_transfers"],
     }
+    if observe:
+        out["trace_events"] = len(fleets[2].tracer)
+        out["trace_dropped"] = fleets[2].tracer.dropped
+        if trace_out:
+            fleets[2].tracer.write(trace_out)
+        if metrics_out:
+            reg = MetricsRegistry()
+            collect_fleet(reg, b)
+            reg.write_json(metrics_out)
+    return out
 
 
-def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
+def run_gate(json_out: bool, bench_out=BENCH_PATH,
+             trace_out=None, metrics_out=None) -> int:
     """The fleet gate (see module docstring)."""
-    identity = _identity_check()
+    identity = _identity_check(trace_out, metrics_out)
     identity_ok = (identity["digests_identical"]
                    and identity["summaries_identical"])
 
@@ -176,11 +198,11 @@ def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
     pods = build_pods(GATE_PODS, *GATE_MESH)
     scenarios = [Scenario("upgrade", t_s=120.0, pod_id=3, duration_s=30.0)]
 
-    serial = run_fleet(pods, rate_scale=GATE_RATE, workers=1,
+    serial, _ = run_fleet(pods, rate_scale=GATE_RATE, workers=1,
+                          scenarios=list(scenarios))
+    par, _ = run_fleet(build_pods(GATE_PODS, *GATE_MESH),
+                       rate_scale=GATE_RATE, workers=workers,
                        scenarios=list(scenarios))
-    par = run_fleet(build_pods(GATE_PODS, *GATE_MESH),
-                    rate_scale=GATE_RATE, workers=workers,
-                    scenarios=list(scenarios))
 
     scale_identical = (serial.pod_digests() == par.pod_digests()
                        and serial.serving_summary()
@@ -300,27 +322,45 @@ def main(argv=None) -> int:
     ap.add_argument("--profile", action="store_true",
                     help="wrap the run in cProfile and print the top-20 "
                          "cumulative hotspots")
+    ap.add_argument("--profile-out", default=None, metavar="FILE",
+                    help="dump the raw cProfile pstats data to FILE "
+                         "(implies --profile)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the merged Chrome/Perfetto trace-event "
+                         "JSON (pid = pod, 9999 = fleet driver)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the unified metrics-registry snapshot "
+                         "as JSON")
     ap.add_argument("--json", action="store_true", help="machine output")
     args = ap.parse_args(argv)
 
-    if args.profile:
-        from _profile import profiled, strip_profile_flag
-        with profiled():
-            return main(strip_profile_flag(argv))
+    if args.profile or args.profile_out:
+        from _profile import run_profiled, strip_profile_flags
+        return run_profiled(main, strip_profile_flags(argv),
+                            args.profile_out)
 
     if args.gate:
-        return run_gate(args.json, args.bench_out)
+        return run_gate(args.json, args.bench_out,
+                        args.trace_out, args.metrics_out)
 
     try:
         rows, cols = (int(x) for x in args.mesh.split(","))
     except ValueError:
         ap.error(f"--mesh wants 'rows,cols' (got {args.mesh!r})")
     scenarios = _parse_scenarios(args, ap)
-    m = run_fleet(build_pods(args.pods, rows, cols), seed=args.seed,
-                  window_s=args.window, routing=args.routing,
-                  rate_scale=args.rate_scale, horizon_s=args.horizon,
-                  record=args.record_requests, workers=args.workers,
-                  scenarios=scenarios)
+    m, fleet = run_fleet(
+        build_pods(args.pods, rows, cols), seed=args.seed,
+        window_s=args.window, routing=args.routing,
+        rate_scale=args.rate_scale, horizon_s=args.horizon,
+        record=args.record_requests, workers=args.workers,
+        scenarios=scenarios,
+        trace_capacity=DEFAULT_CAPACITY if args.trace_out else 0)
+    if args.trace_out:
+        fleet.tracer.write(args.trace_out)
+    if args.metrics_out:
+        reg = MetricsRegistry()
+        collect_fleet(reg, m)
+        reg.write_json(args.metrics_out)
     if args.json:
         print(json.dumps(m.summary(), indent=2))
     else:

@@ -56,6 +56,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 
 from cluster_sim import BENCH_PATH, _write_bench          # noqa: E402
 from repro.core import mesh_2d                            # noqa: E402
+from repro.obs.registry import (MetricsRegistry,          # noqa: E402
+                                collect_cluster)
+from repro.obs.trace import Tracer                        # noqa: E402
 from repro.sched import (ClusterScheduler, ServingConfig,  # noqa: E402
                          TRACES, make_policy, make_trace)
 from repro.serve.plane import ServingPlane                # noqa: E402
@@ -83,7 +86,7 @@ POLICY_KWARGS = {
 def run_policy(policy_name, trace, mesh, *, trace_name=GATE_TRACE,
                admission="sla", seed=0, epoch_s=2.0, engine="vector",
                record_requests=True, arrival=None, mix="default",
-               rate_scale=1.0):
+               rate_scale=1.0, tracer=None):
     """One serving run: fresh policy + scheduler + plane."""
     kwargs = dict(POLICY_KWARGS.get(policy_name, {}))
     if policy_name == "mig" and mesh != tuple(GATE_MESH):
@@ -95,7 +98,7 @@ def run_policy(policy_name, trace, mesh, *, trace_name=GATE_TRACE,
                               record_requests=record_requests,
                               arrival=arrival, request_mix=mix,
                               rate_scale=rate_scale),
-        admission=admission)
+        admission=admission, tracer=tracer)
     t0 = time.perf_counter()
     metrics = sched.run(trace, trace_name=trace_name)
     return metrics, time.perf_counter() - t0
@@ -161,17 +164,31 @@ def _bench_rows(rows, mesh):
     return out
 
 
-def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
-    """The serving-gate (see module docstring)."""
+def run_gate(json_out: bool, bench_out=BENCH_PATH,
+             trace_out=None, metrics_out=None) -> int:
+    """The serving-gate (see module docstring).  With ``--trace-out`` /
+    ``--metrics-out`` the determinism replay runs with the span tracer
+    armed, so the bit-identity check doubles as the tracing-purity check."""
     trace = make_trace(GATE_TRACE)
     runs = {}
     for name in ("vnpu", "mig", "uvm"):
         runs[name] = run_policy(name, trace, GATE_MESH)
     # determinism: a second vNPU run must replay bit-identically at the
     # request level (every TTFT/TPOT and every resize decision)
-    vnpu2, _ = run_policy("vnpu", trace, GATE_MESH)
+    tracer = None
+    if trace_out or metrics_out:
+        tracer = Tracer()
+        tracer.process_name(
+            f"vnpu {GATE_MESH[0]}x{GATE_MESH[1]} {GATE_TRACE}")
+    vnpu2, _ = run_policy("vnpu", trace, GATE_MESH, tracer=tracer)
     deterministic = (_request_trajectory(runs["vnpu"][0])
                      == _request_trajectory(vnpu2))
+    if trace_out:
+        tracer.write(trace_out)
+    if metrics_out:
+        reg = MetricsRegistry()
+        collect_cluster(reg, vnpu2)
+        reg.write_json(metrics_out)
 
     rows = [_policy_row(m, w) for m, w in runs.values()]
     by = {r["policy"]: r for r in rows}
@@ -198,6 +215,9 @@ def run_gate(json_out: bool, bench_out=BENCH_PATH) -> int:
         "gate_ok": (deterministic and goodput_ok and resize_ok
                     and budget_ok),
     }
+    if tracer is not None:
+        report["trace_events"] = len(tracer)
+        report["trace_dropped"] = tracer.dropped
     _write_bench("serving", report, _bench_rows(rows, GATE_MESH), bench_out)
     if json_out:
         print(json.dumps(report, indent=2))
@@ -344,16 +364,26 @@ def main(argv=None) -> int:
     ap.add_argument("--profile", action="store_true",
                     help="wrap the run in cProfile and print the top-20 "
                          "cumulative hotspots")
+    ap.add_argument("--profile-out", default=None, metavar="FILE",
+                    help="dump the raw cProfile pstats data to FILE "
+                         "(implies --profile)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run (sim-time request/tenant spans)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the unified metrics-registry snapshot "
+                         "as JSON")
     ap.add_argument("--json", action="store_true", help="machine output")
     args = ap.parse_args(argv)
 
-    if args.profile:
-        from _profile import profiled, strip_profile_flag
-        with profiled():
-            return main(strip_profile_flag(argv))
+    if args.profile or args.profile_out:
+        from _profile import run_profiled, strip_profile_flags
+        return run_profiled(main, strip_profile_flags(argv),
+                            args.profile_out)
 
     if args.gate:
-        return run_gate(args.json, args.bench_out)
+        return run_gate(args.json, args.bench_out,
+                        args.trace_out, args.metrics_out)
     if args.scale_gate:
         return run_scale_gate(args.json, args.bench_out)
 
@@ -370,8 +400,16 @@ def main(argv=None) -> int:
 
     arrival = (None if args.arrival == "poisson"
                else ArrivalProcess(kind=args.arrival))
+    obs_tracer = Tracer() if args.trace_out else Tracer.NULL
+    reg = MetricsRegistry() if args.metrics_out else None
     rows = []
-    for name in [p.strip() for p in args.policy.split(",") if p.strip()]:
+    for i, name in enumerate(
+            p.strip() for p in args.policy.split(",") if p.strip()):
+        tracer = None
+        if args.trace_out:
+            tracer = Tracer(pid=i)
+            tracer.process_name(
+                f"{name} {rows_cols[0]}x{rows_cols[1]} {args.trace}")
         metrics, wall = run_policy(name, trace, rows_cols,
                                    trace_name=args.trace,
                                    admission=args.admission,
@@ -379,8 +417,17 @@ def main(argv=None) -> int:
                                    engine=args.engine,
                                    record_requests=not args.no_request_log,
                                    arrival=arrival, mix=args.mix,
-                                   rate_scale=args.rate_scale)
+                                   rate_scale=args.rate_scale,
+                                   tracer=tracer)
         rows.append(_policy_row(metrics, wall))
+        if tracer is not None:
+            obs_tracer.absorb(tracer.drain())
+        if reg is not None:
+            collect_cluster(reg, metrics, prefix=f"cluster_{name}")
+    if args.trace_out:
+        obs_tracer.write(args.trace_out)
+    if reg is not None:
+        reg.write_json(args.metrics_out)
     if args.json:
         print(json.dumps({"trace": args.trace, "mesh": list(rows_cols),
                           "admission": args.admission, "policies": rows},

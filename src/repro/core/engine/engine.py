@@ -71,6 +71,14 @@ class EngineStats:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def as_dict(self) -> Dict[str, float]:
+        """Flat JSON-safe export (the raw dataclass counters plus the
+        derived hit rate) — what the observability registry and the
+        epoch-boundary ``engine_cache`` counter track consume."""
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = round(self.hit_rate, 4)
+        return d
+
 
 class MappingEngine:
     """Incremental, cached, vectorized topology mapping over one NPU mesh."""

@@ -65,6 +65,9 @@ class SerialExecutor:
                  ) -> Tuple[List[TenantSpec], List[TenantSpec]]:
         return self._hosts[pod_id].evacuate(now)
 
+    def drain_traces(self) -> List[Tuple[int, dict]]:
+        return [(pid, self._hosts[pid].drain_trace()) for pid in self.order]
+
     def finish_all(self) -> List[ClusterMetrics]:
         return [self._hosts[pid].finish() for pid in self.order]
 
@@ -102,6 +105,8 @@ def _worker_main(conn, pod_specs: List[PodSpec],
                 out = None
             elif cmd == "evacuate":
                 out = hosts[args[0]].evacuate(args[1])
+            elif cmd == "drain_traces":
+                out = [(pid, hosts[pid].drain_trace()) for pid in order]
             elif cmd == "finish_all":
                 out = [(pid, hosts[pid].finish()) for pid in order]
             elif cmd == "close":
@@ -204,6 +209,13 @@ class ParallelExecutor:
     def evacuate(self, pod_id: int, now: float
                  ) -> Tuple[List[TenantSpec], List[TenantSpec]]:
         return self._call_owner(pod_id, "evacuate", pod_id, now)
+
+    def drain_traces(self) -> List[Tuple[int, dict]]:
+        payloads: Dict[int, dict] = {}
+        for worker_out in self._call_all("drain_traces"):
+            for pid, payload in worker_out:
+                payloads[pid] = payload
+        return [(pid, payloads[pid]) for pid in self.order]
 
     def finish_all(self) -> List[ClusterMetrics]:
         metrics: Dict[int, ClusterMetrics] = {}

@@ -48,6 +48,7 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..obs.trace import FLEET_PID, Tracer
 from ..sched.cluster import ClusterMetrics
 from ..sched.events import TenantSpec
 from ..sched.traces import TRACES, poisson_trace
@@ -98,6 +99,10 @@ class FleetConfig:
     #: attempt; after ``retry_max`` re-route failures the tenant is dropped
     retry_base_s: float = 2.0
     retry_max: int = 4
+    #: per-pod (and driver) span ring-buffer capacity; 0 disables tracing.
+    #: Tracing is a pure observer — trajectories and summaries are
+    #: bit-identical with it on or off, serial or parallel.
+    trace_capacity: int = 0
 
 
 @dataclasses.dataclass
@@ -229,6 +234,17 @@ class Fleet:
         self.router = FleetRouter(
             routing_policy or make_routing_policy(self.config.routing))
         self.switch = PodSwitch(self.config.switch)
+        # the merged fleet trace: per-pod ring buffers drain into this one
+        # at every window barrier (pod-id order, so serial == parallel);
+        # driver-scope events (routing, transfers, scenarios) land under
+        # FLEET_PID.  Pure observer — never feeds back into the run.
+        if self.config.trace_capacity > 0:
+            self.tracer = Tracer(
+                capacity=self.config.trace_capacity * (len(self.pods) + 1),
+                pid=FLEET_PID)
+            self.tracer.process_name("fleet driver")
+        else:
+            self.tracer = Tracer.NULL
 
     def _params(self) -> FleetPodParams:
         cfg = self.config
@@ -236,7 +252,8 @@ class Fleet:
             fleet_seed=cfg.seed, trace_name=cfg.trace_name,
             serving=cfg.serving, engine=cfg.engine,
             record_requests=cfg.record_requests, rate_scale=cfg.rate_scale,
-            request_mix=cfg.request_mix)
+            request_mix=cfg.request_mix,
+            trace_capacity=cfg.trace_capacity)
 
     def run(self, trace: Sequence[TenantSpec],
             scenarios: Sequence[Scenario] = (),
@@ -278,6 +295,7 @@ class Fleet:
                pending: List[Scenario],
                end_s: float) -> Tuple[List[ClusterMetrics], int, int, int]:
         cfg = self.config
+        tr = self.tracer
         undrain_at: List[Tuple[float, int]] = []
         restore_at: List[float] = []     # brownout ends (switch back to 1.0)
         # unroutable tenants awaiting re-route: (ready_s, attempts,
@@ -314,6 +332,10 @@ class Fleet:
             batches: Dict[int, List[TenantSpec]] = {}
             while pending and pending[0].t_s <= t:
                 sc = pending.pop(0)
+                tr.instant(f"scenario:{sc.kind}", "fleet", t,
+                           args={"pod": sc.pod_id,
+                                 "duration_s": sc.duration_s,
+                                 "factor": sc.factor})
                 if sc.kind == "switch-brownout":
                     self.switch.set_degradation(sc.factor)
                     restore_at.append(sc.t_s + sc.duration_s)
@@ -343,6 +365,9 @@ class Fleet:
                     # transfer completes
                     done = self.switch.transfer(sc.pod_id, dst,
                                                 spec.memory_bytes, t)
+                    tr.span("transfer", "fleet", t, done - t,
+                            args={"tid": spec.tid, "src": sc.pod_id,
+                                  "dst": dst, "bytes": spec.memory_bytes})
                     batches.setdefault(dst, []).append(
                         dataclasses.replace(spec, arrival_s=done))
                 for spec in queued:
@@ -370,6 +395,9 @@ class Fleet:
                     if dst is None:
                         if attempts >= cfg.retry_max:
                             n_dropped += 1
+                            tr.instant("retry_drop", "fleet", t,
+                                       args={"tid": spec.tid,
+                                             "attempts": attempts})
                         else:
                             n_retried += 1
                             backoff = cfg.retry_base_s * (2.0 ** attempts)
@@ -379,6 +407,10 @@ class Fleet:
                     if src is not None:
                         done = self.switch.transfer(src, dst,
                                                     spec.memory_bytes, t)
+                        tr.span("transfer", "fleet", t, done - t,
+                                args={"tid": spec.tid, "src": src,
+                                      "dst": dst,
+                                      "bytes": spec.memory_bytes})
                         spec = dataclasses.replace(spec, arrival_s=done)
                     batches.setdefault(dst, []).append(spec)
 
@@ -387,6 +419,10 @@ class Fleet:
                 spec = arrivals[idx]
                 idx += 1
                 dst = self.router.route(spec, view_list)
+                if tr.enabled:
+                    tr.instant("route", "fleet", spec.arrival_s,
+                               args={"tid": spec.tid,
+                                     "dst": -1 if dst is None else dst})
                 if dst is not None:
                     batches.setdefault(dst, []).append(spec)
                 else:
@@ -396,9 +432,20 @@ class Fleet:
             if batches:
                 ex.feed_many(batches)
             ex.advance_all(t_next)     # the parallel section
+            if tr.enabled:
+                # pod ring buffers drain into the merged fleet trace at the
+                # barrier, in pod-id order — the same merged stream whether
+                # pods ran serially or across worker processes
+                for _pid, payload in ex.drain_traces():
+                    tr.absorb(payload)
             n_windows += 1
             t = t_next
             if t >= end_s:
                 break
         n_dropped += len(retry)        # still waiting when the run ended
-        return ex.finish_all(), n_windows, n_retried, n_dropped
+        pod_metrics = ex.finish_all()
+        if tr.enabled:
+            # finish() closes still-open spans (down cores at the horizon)
+            for _pid, payload in ex.drain_traces():
+                tr.absorb(payload)
+        return pod_metrics, n_windows, n_retried, n_dropped

@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.topology import mesh_2d
+from ..obs.trace import Tracer
 from ..sched.cluster import ClusterMetrics, ClusterScheduler, ServingConfig
 from ..sched.events import TenantSpec
 from ..sched.policy import make_policy
@@ -72,6 +73,8 @@ class FleetPodParams:
     record_requests: bool = False
     rate_scale: float = 1.0
     request_mix: str = "default"
+    #: per-pod span ring-buffer capacity; 0 disables tracing entirely
+    trace_capacity: int = 0
 
 
 class PodHost:
@@ -95,9 +98,17 @@ class PodHost:
                 record_requests=params.record_requests,
                 rate_scale=params.rate_scale,
                 request_mix=params.request_mix)
+        if params.trace_capacity > 0:
+            self.tracer = Tracer(capacity=params.trace_capacity,
+                                 pid=spec.pod_id)
+            self.tracer.process_name(
+                f"pod{spec.pod_id} {spec.rows}x{spec.cols} {spec.policy}")
+        else:
+            self.tracer = Tracer.NULL
         self.sched = ClusterScheduler(self.policy, epoch_s=spec.epoch_s,
                                       rescore=spec.rescore, serving=serving,
-                                      admission=spec.admission)
+                                      admission=spec.admission,
+                                      tracer=self.tracer)
         self.sched.begin(trace_name=params.trace_name, driven=True)
         self.failed = False
 
@@ -151,6 +162,11 @@ class PodHost:
         n_res = len(self.sched._residents)
         out = self.sched.evacuate(now)
         return out[:n_res], out[n_res:]
+
+    def drain_trace(self) -> dict:
+        """Hand the buffered trace events to the driver (clears the pod's
+        ring buffer).  Cheap no-op payload when tracing is off."""
+        return self.tracer.drain()
 
     def finish(self) -> ClusterMetrics:
         return self.sched.finish()

@@ -51,6 +51,8 @@ from ..core import simulator as S
 from ..core.baselines import AllocationError
 from ..core.simulator import Flow, HWConfig, PhaseModel, RunReport
 from ..core.workloads import WorkloadGraph
+from ..obs.timeline import TimelineSampler
+from ..obs.trace import Tracer
 from ..serve.plane import ServingPlane
 from ..serve.requests import ArrivalProcess, get_profile
 from ..serve.stats import LatencyStats
@@ -402,10 +404,11 @@ class ClusterMetrics:
             out["failed_cores"] = self.n_failed_cores
         if self.n_repaired_cores or self.n_link_faults or self.n_fault_kills:
             out["recovery"] = self.recovery_summary()
-        if self.n_evacuated:
-            out["evacuated"] = self.n_evacuated
-        if self.n_probe_skips:
-            out["probe_skips"] = self.n_probe_skips
+        # unconditional: these were once gated on being non-zero, which
+        # silently dropped them from printed tables (and hid regressions
+        # where a counter unexpectedly *stayed* zero)
+        out["evacuated"] = self.n_evacuated
+        out["probe_skips"] = self.n_probe_skips
         if self.engine_counters:
             out["engine"] = dict(self.engine_counters)
         if self.ledger_counters:
@@ -433,7 +436,8 @@ class ClusterScheduler:
                  serving: Optional[ServingConfig] = None,
                  admission: str = "fifo",
                  defrag_planner: str = "greedy",
-                 recovery: Optional[RecoveryConfig] = None):
+                 recovery: Optional[RecoveryConfig] = None,
+                 tracer: Optional[Tracer] = None):
         if rescore not in RESCORE_MODES:
             raise ValueError(
                 f"rescore must be one of {RESCORE_MODES}, got {rescore!r}")
@@ -448,6 +452,11 @@ class ClusterScheduler:
         self.policy = policy
         self.hw = hw or S.SIM_CONFIG
         self.topo = policy.topo
+        # observability plane: a pure observer — every emission is guarded
+        # by ``tracer.enabled`` and only records values the sim computed
+        # anyway, so trajectories are bit-identical with tracing on or off
+        self.tracer = tracer if tracer is not None else Tracer.NULL
+        self.timeline = TimelineSampler(self.tracer)
         self.epoch_s = epoch_s
         self.defrag = defrag
         self.max_migrations_per_event = max_migrations_per_event
@@ -482,6 +491,8 @@ class ClusterScheduler:
                          rate_scale=serving.rate_scale,
                          mix=serving.request_mix)
             if serving is not None else None)
+        if self.plane is not None:
+            self.plane.tracer = self.tracer
         self._resize_state: Dict[int, _ResizeState] = {}
         # tid -> {(own bytes, total bytes) HBM-share key -> phase model}:
         # the byte-weighted share oscillates as servers go busy/idle, so
@@ -959,6 +970,10 @@ class ClusterScheduler:
             self.metrics.n_grows += 1
         else:
             self.metrics.n_shrinks += 1
+        if self.tracer.enabled:
+            self.tracer.instant("resized", "tenant", now, tid=ev.tid,
+                                args={"old_n": old_n,
+                                      "new_n": rt.spec.n_cores})
         rt.migrations += 1
         pause_cycles = self.policy.migration_cycles(
             rt.placement, rt.graph.total_weight_bytes,
@@ -1020,6 +1035,15 @@ class ClusterScheduler:
         evq.push(rt.depart_s, DEPARTURE, tid=spec.tid)
         self.metrics.n_admitted += 1
         self.metrics.queue_waits_s.append(now - spec.arrival_s)
+        tr = self.tracer
+        if tr.enabled:
+            if now > spec.arrival_s:
+                tr.span("queued", "tenant", spec.arrival_s,
+                        now - spec.arrival_s, tid=spec.tid)
+            tr.instant("admitted", "tenant", now, tid=spec.tid,
+                       args={"model": spec.model,
+                             "n_cores": spec.n_cores,
+                             "strict": strict})
         return True
 
     def _charge_migration(self, rt: ResidentTenant, now: float) -> None:
@@ -1033,6 +1057,11 @@ class ClusterScheduler:
             self.hw.hbm_bytes_per_cycle)
         rt.pause_until_s = max(rt.pause_until_s,
                                now + pause_cycles / self.hw.freq_hz)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "migrated", "tenant", now, tid=rt.spec.tid,
+                args={"pause_s": pause_cycles / self.hw.freq_hz,
+                      "migrations": rt.migrations})
         self._tenant_moved(rt)
 
     def _defrag_for(self, spec: TenantSpec, now: float) -> bool:
@@ -1085,6 +1114,9 @@ class ClusterScheduler:
             moved = True
         if moved:
             self.metrics.n_defrag_plans += 1
+            if self.tracer.enabled:
+                self.tracer.instant("defrag_plan", "defrag", now,
+                                    args={"moves": len(plan.moves)})
         return moved
 
     def _fail_cores(self, cores: Sequence[int], now: float,
@@ -1107,6 +1139,9 @@ class ClusterScheduler:
         self.metrics.n_failed_cores += len(newly_dead)
         for c in sorted(newly_dead):
             self._core_down_since[c] = now    # MTTR clock starts
+        if newly_dead and self.tracer.enabled:
+            self.tracer.instant("core_fail", "chaos", now,
+                                args={"cores": sorted(newly_dead)})
         dead = set(cores)
         for rt in list(self._residents.values()):
             if not dead & set(rt.placement.cores):
@@ -1138,6 +1173,10 @@ class ClusterScheduler:
                 self.metrics.mttr_sum_s += now - t0
                 self.metrics.core_downtime_s += now - t0
                 self.metrics.n_repairs += 1
+                if self.tracer.enabled:
+                    # one span per closed fail->repair window
+                    self.tracer.span("core_down", "chaos", t0, now - t0,
+                                     args={"core": c})
 
     def _fault_kill(self, rt: ResidentTenant, now: float,
                     evq: EventQueue) -> None:
@@ -1163,6 +1202,13 @@ class ClusterScheduler:
         self.metrics.tenant_active_s[tid] = max(now - rt.admit_s, 0.0)
         self.metrics.n_fault_kills += 1
         self.metrics.requests_fault_lost += requests_lost
+        if self.tracer.enabled:
+            self.tracer.span("resident", "tenant", rt.admit_s,
+                             max(now - rt.admit_s, 0.0), tid=tid,
+                             args={"end": "fault_kill",
+                                   "migrations": rt.migrations})
+            self.tracer.instant("fault_kill", "chaos", now, tid=tid,
+                                args={"requests_lost": requests_lost})
         rc = self.recovery
         remaining = max(rt.depart_s - now, 0.0)
         if rt.spec.tenant_class == "train":
@@ -1227,6 +1273,10 @@ class ClusterScheduler:
         self._degraded_links[link] = max(
             self._degraded_links.get(link, 1.0), factor)
         self.metrics.n_link_faults += 1
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "link_fail" if ev.kind == LINK_FAIL else "link_degrade",
+                "chaos", now, args={"link": list(link), "factor": factor})
         self._invalidate_scores()
         if ev.kind != LINK_FAIL or self.recovery is None \
                 or not self.recovery.migrate_on_link_fail:
@@ -1246,6 +1296,9 @@ class ClusterScheduler:
         link = (int(ev.link[0]), int(ev.link[1]))
         if self._degraded_links.pop(link, None) is not None:
             self.metrics.n_link_repairs += 1
+            if self.tracer.enabled:
+                self.tracer.instant("link_repair", "chaos", now,
+                                    args={"link": list(link)})
             self._invalidate_scores()
 
     def _reject(self, spec: TenantSpec, wait_s: float) -> None:
@@ -1253,6 +1306,9 @@ class ClusterScheduler:
         (otherwise policies that reject more would *look* faster)."""
         self.metrics.n_rejected += 1
         self.metrics.queue_waits_s.append(wait_s)
+        if self.tracer.enabled:
+            self.tracer.span("queued", "tenant", spec.arrival_s, wait_s,
+                             tid=spec.tid, args={"end": "rejected"})
 
     def _expire_waiting(self, now: float) -> None:
         kept = []
@@ -1423,6 +1479,11 @@ class ClusterScheduler:
             self.metrics.tenant_iterations[tid] = rt.served_iterations
             self.metrics.tenant_active_s[tid] = max(now - rt.admit_s, 0.0)
             self.metrics.n_evacuated += 1
+            if self.tracer.enabled:
+                self.tracer.span("resident", "tenant", rt.admit_s,
+                                 max(now - rt.admit_s, 0.0), tid=tid,
+                                 args={"end": "evacuated",
+                                       "migrations": rt.migrations})
             remaining = max(rt.depart_s - now, 0.0)
             out.append(dataclasses.replace(rt.spec, arrival_s=now,
                                            duration_s=remaining))
@@ -1493,6 +1554,12 @@ class ClusterScheduler:
                         rt.served_iterations
                     self.metrics.tenant_active_s[ev.tid] = \
                         max(rt.depart_s - rt.admit_s, 0.0)
+                    if self.tracer.enabled:
+                        self.tracer.span(
+                            "resident", "tenant", rt.admit_s,
+                            max(rt.depart_s - rt.admit_s, 0.0), tid=ev.tid,
+                            args={"end": "departed",
+                                  "migrations": rt.migrations})
                 self._drain_queue(now, evq)
             elif ev.kind == FAILURE:
                 self._fail_cores(ev.cores, now, evq)
@@ -1516,6 +1583,8 @@ class ClusterScheduler:
                     n_resident=len(self._residents),
                     n_queued=len(self._waiting),
                     agg_fps=sum(self._fps(t) for t in self._residents)))
+                if self.tracer.enabled:
+                    self._trace_epoch(now)
                 if self.plane is not None:
                     self._check_pressure(now, evq)
                 # re-arm while the system still has work in flight (in
@@ -1526,6 +1595,32 @@ class ClusterScheduler:
             # integrate to the barrier instant so the snapshot the router
             # reads (utilization, queue depths, serving pressure) is at t
             self._advance(t)
+
+    def _trace_epoch(self, now: float) -> None:
+        """Epoch-boundary observability: occupancy/link-heat timelines
+        (:class:`~repro.obs.timeline.TimelineSampler`), the tenant census,
+        and the MappingEngine's cumulative cache telemetry as counter
+        tracks.  Every input is a pure read of state the epoch scoring
+        just computed — the mapping engine has no sim-time access of its
+        own, so its hit/miss/escalation counters surface here."""
+        sample = self.metrics.samples[-1]
+        self.timeline.sample(
+            now, n_total=self.topo.num_nodes,
+            n_free=len(self.policy.free_cores()),
+            n_failed=len(self._failed_cores),
+            link_loads=self.ledger.link_loads
+            if self.ledger is not None else None)
+        self.tracer.counter("tenants", now,
+                            {"resident": sample.n_resident,
+                             "queued": sample.n_queued})
+        counters = getattr(self.policy, "engine_counters", None)
+        if callable(counters):
+            ec = counters()
+            self.tracer.counter(
+                "engine_cache", now,
+                {"hits": ec.get("cache_hits", 0),
+                 "misses": ec.get("cache_misses", 0),
+                 "escalations": ec.get("exact_escalations", 0)})
 
     def finish(self) -> ClusterMetrics:
         """Close the run: censor leftover queued tenants as rejected, stamp
@@ -1542,6 +1637,11 @@ class ClusterScheduler:
         for c in sorted(self._core_down_since):
             self.metrics.core_downtime_s += max(
                 self._last_t - self._core_down_since[c], 0.0)
+            if self.tracer.enabled:
+                self.tracer.span(
+                    "core_down", "chaos", self._core_down_since[c],
+                    max(self._last_t - self._core_down_since[c], 0.0),
+                    args={"core": c, "open": True})
         self._core_down_since = {}
         self.metrics.n_cores_total = self.topo.num_nodes
         if self.plane is not None:

@@ -63,6 +63,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.simulator import PhaseModel
+from ..obs.trace import Tracer
 from .kv import KVStats, TenantKV
 from .requests import (ArrivalProcess, RequestSpec, ServeProfile,
                        get_profile, sample_requests)
@@ -180,8 +181,10 @@ class TenantServer:
     def __init__(self, tid: int, profile: ServeProfile,
                  stream: List[RequestSpec], arrival_s: float,
                  admit_s: float, depart_s: float,
-                 sink: Optional[Sink] = None):
+                 sink: Optional[Sink] = None,
+                 tracer: Optional["Tracer"] = None):
         self.tid = tid
+        self.tracer = tracer if tracer is not None else Tracer.NULL
         self.profile = profile
         self.kv = TenantKV(profile.kv_arena_bytes, profile.kv_block_bytes,
                            profile.kv_bytes_per_token)
@@ -260,8 +263,19 @@ class TenantServer:
             self.sink(a.rec.ttft_s, a.rec.tpot_s, a.rec.tokens_out,
                       a.rec.sla_good(self.profile.ttft_slo_s,
                                      self.profile.tpot_slo_s))
+        if self.tracer.enabled:
+            rec = a.rec
+            ft = rec.first_token_s
+            self.tracer.span("prefill", "request", rec.arrival_s,
+                             ft - rec.arrival_s, tid=self.tid,
+                             args={"rid": rec.rid,
+                                   "prompt_tokens": rec.prompt_tokens})
+            self.tracer.span("decode", "request", ft, t - ft, tid=self.tid,
+                             args={"rid": rec.rid,
+                                   "tokens": rec.tokens_out,
+                                   "preempts": rec.preempts})
 
-    def _preempt_youngest(self) -> bool:
+    def _preempt_youngest(self, t: float) -> bool:
         """KV grow OOM: evict the youngest active request (latest arrival,
         highest rid tiebreak) for free-and-recompute re-admission."""
         if not self.active:
@@ -275,6 +289,10 @@ class TenantServer:
             spec=victim.spec, arrival_s=victim.rec.arrival_s,
             preempts=victim.rec.preempts + 1))
         victim.rec.preempts += 1
+        if self.tracer.enabled:
+            self.tracer.instant("kv_preempt", "request", t, tid=self.tid,
+                                args={"rid": victim.spec.rid,
+                                      "preempts": victim.rec.preempts})
         return True
 
     def _admit_pending(self) -> List[_Pending]:
@@ -388,7 +406,7 @@ class TenantServer:
                 continue                        # preempted by an earlier grow
             need = int(math.ceil(a.ctx_tokens + dtok))
             while not self.kv.try_grow(a.spec.rid, need):
-                if not self._preempt_youngest():
+                if not self._preempt_youngest(t):
                     break
                 preempted = True
                 if a not in self.active:       # preempted itself
@@ -515,6 +533,7 @@ class _VectorPool:
         self._by_index: List[Optional[_Row]] = []
         self._free: List[int] = []
         self._cap = 0
+        self.tracer = Tracer.NULL               # set by the plane
         self._alloc(16)
 
     # -- storage -------------------------------------------------------------
@@ -737,6 +756,11 @@ class _VectorPool:
         row.pending.appendleft((victim.ix, victim.preempts,
                                 victim.arrival_s))
         self.n_pend[r] = len(row.pending)
+        if self.tracer.enabled:
+            self.tracer.instant("kv_preempt", "request",
+                                float(self.t_cur[r]), tid=row.tid,
+                                args={"rid": victim.rid,
+                                      "preempts": victim.preempts})
         return True
 
     def _grow_row(self, r: int, row: _Row, dtok: float) -> bool:
@@ -789,6 +813,18 @@ class _VectorPool:
             if sink_live:
                 good = ttft <= prof.ttft_slo_s and tpot <= prof.tpot_slo_s
                 row.emit_buf.append((ttft, tpot, s.max_new, good))
+            if self.tracer.enabled:
+                ft = s.first_token_s
+                self.tracer.span(
+                    "prefill", "request", s.arrival_s, ft - s.arrival_s,
+                    tid=row.tid,
+                    args={"rid": s.rid,
+                          "prompt_tokens":
+                          row.stream[s.ix].prompt_tokens})
+                self.tracer.span(
+                    "decode", "request", ft, end - ft, tid=row.tid,
+                    args={"rid": s.rid, "tokens": s.max_new,
+                          "preempts": s.preempts})
 
     # -- the lockstep loop ---------------------------------------------------
     def advance_all(self, entries: List[Tuple[int, float, PhaseModel]],
@@ -972,6 +1008,9 @@ class ServingPlane:
         self.rate_scale = rate_scale
         self.mix = mix
         self.sink = sink
+        # pure-observer span tracer (the scheduler rebinds this right
+        # after construction); threaded into both engines at attach time
+        self.tracer = Tracer.NULL
         self.servers: Dict[int, TenantServer] = {}        # scalar engine
         self._pool: Optional[_VectorPool] = (
             _VectorPool() if engine == "vector" else None)
@@ -1008,12 +1047,13 @@ class ServingPlane:
                                  arrival=self.arrival,
                                  rate_scale=self.rate_scale, mix=self.mix)
         if self._pool is not None:
+            self._pool.tracer = self.tracer
             self._pool.attach(tid, profile, stream, arrival_s, admit_s,
                               depart_s, record=self.record_requests)
         else:
             self.servers[tid] = TenantServer(
                 tid, profile, stream, arrival_s, admit_s, depart_s,
-                sink=self._emit)
+                sink=self._emit, tracer=self.tracer)
         return True
 
     def is_attached(self, tid: int) -> bool:

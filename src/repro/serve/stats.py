@@ -169,6 +169,74 @@ class LatencyStats:
             f"percentile {q} not tracked once sketching starts "
             f"(have {[p * 100 for p in TRACKED_QUANTILES]})")
 
+    # -- export ------------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Flat JSON-safe digest: exact counters + the tracked quantiles
+        (what BENCH records and the metrics registry embed)."""
+        return {
+            "count": self.count,
+            "total": self.total,
+            "mean": self.mean,
+            "min": self.vmin if self.count else 0.0,
+            "max": self.vmax if self.count else 0.0,
+            "quantiles": {f"{p:g}": self.percentile(p * 100.0)
+                          for p in TRACKED_QUANTILES} if self.count else {},
+        }
+
+    def snapshot(self) -> dict:
+        """Full JSON-safe state export: the :meth:`to_dict` digest plus
+        the mode-specific internals (raw sample buffer, P² marker sets,
+        or merged CDF knots) — everything :meth:`from_snapshot` needs to
+        rebuild an instance that answers every query identically."""
+        out = self.to_dict()
+        if self._cdf is not None:
+            out["mode"] = "merged"
+            out["cdf"] = [[n, [[v, f] for v, f in pts]]
+                          for n, pts in self._cdf]
+        elif self._sketches is None:
+            out["mode"] = "exact"
+            out["samples"] = list(self._buf)
+        else:
+            out["mode"] = "sketch"
+            out["sketches"] = [
+                {"p": sk.p, "q": list(sk._q), "n": list(sk._n),
+                 "np": list(sk._np), "count": sk.count}
+                for sk in self._sketches]
+        return out
+
+    @classmethod
+    def from_snapshot(cls, snap: dict) -> "LatencyStats":
+        """Rebuild an instance from :meth:`snapshot` output.  Exact mode
+        replays the buffer in its recorded order (bit-identical counters
+        and percentiles); sketch/merged modes restore the marker/CDF
+        state directly."""
+        out = cls()
+        mode = snap.get("mode", "exact")
+        if mode == "exact":
+            for v in snap.get("samples", ()):
+                out.add(v)
+            return out
+        out.count = int(snap["count"])
+        out.total = float(snap["total"])
+        out.vmin = float(snap["min"])
+        out.vmax = float(snap["max"])
+        out._buf = None
+        if mode == "merged":
+            out._cdf = [(int(n), [(float(v), float(f)) for v, f in pts])
+                        for n, pts in snap["cdf"]]
+            return out
+        if mode != "sketch":
+            raise ValueError(f"unknown LatencyStats snapshot mode {mode!r}")
+        out._sketches = []
+        for s in snap["sketches"]:
+            sk = P2Quantile(float(s["p"]))
+            sk._q = [float(v) for v in s["q"]]
+            sk._n = [int(v) for v in s["n"]]
+            sk._np = [float(v) for v in s["np"]]
+            sk.count = int(s["count"])
+            out._sketches.append(sk)
+        return out
+
     # -- fleet merge -------------------------------------------------------
     def _cdf_points(self) -> List[Tuple[float, float]]:
         """This series' empirical CDF as (value, fraction<=value) knots —

@@ -73,6 +73,39 @@ class TestCheckRecord:
         assert any("duplicates" in v
                    for v in check_bench.check_record(rec))
 
+    def test_embedded_metrics_snapshot_clean(self):
+        rec = _minimal_record()
+        rec["entries"][0]["metrics"] = [
+            {"name": "cluster_admitted_total", "kind": "counter",
+             "value": 12},
+            {"name": "cluster_ttft_seconds", "kind": "histogram",
+             "count": 2, "sum": 1.0, "min": 0.4, "max": 0.6,
+             "quantiles": {"0.5": 0.5}},
+        ]
+        assert check_bench.check_record(rec) == []
+
+    def test_embedded_metrics_violations_flagged(self):
+        rec = _minimal_record()
+        rec["entries"][0]["metrics"] = [
+            {"name": "bad name", "kind": "counter", "value": 1},
+            {"name": "dup_total", "kind": "counter", "value": 1},
+            {"name": "dup_total", "kind": "gauge",
+             "value": float("inf")},
+            {"name": "h", "kind": "histogram", "count": float("nan"),
+             "sum": 0.0, "min": 0.0, "max": 0.0, "quantiles": {}},
+        ]
+        out = check_bench.check_record(rec)
+        assert any("does not match" in v for v in out)
+        assert any("duplicates metric name" in v for v in out)
+        assert any(".value" in v and "finite" in v for v in out)
+        assert any(".count" in v and "finite" in v for v in out)
+
+    def test_metrics_not_a_list_flagged(self):
+        rec = _minimal_record()
+        rec["entries"][0]["metrics"] = {"name": "x"}
+        assert any("expected list" in v
+                   for v in check_bench.check_record(rec))
+
 
 class TestRepoRecord:
     def test_checked_in_record_is_clean(self):

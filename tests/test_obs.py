@@ -1,0 +1,449 @@
+"""Observability plane: tracer purity, ring-buffer determinism, the
+metrics registry, timelines and LatencyStats snapshot round-trips.
+
+The load-bearing invariant is that tracing is a *pure observer*: a run
+with a Tracer attached must produce bit-identical trajectories, digests
+and summaries to the same run without one — across the cluster
+scheduler, the serving plane (both engines), the fleet executors and a
+chaos storm.  The CI obs-gate re-checks this on the 16x16 gate; these
+tests pin it at tier-1 scale, plus the flight-recorder semantics
+(count-based deterministic eviction), the Chrome trace-event schema
+(via ``tools/trace_report.validate``) and the registry rules
+(Prometheus charset, duplicate rejection, snapshot lint).
+"""
+import importlib.util
+import math
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip, unit tests still run
+    from _hypothesis_fallback import given, settings, st
+
+from repro.chaos import make_fault_plan
+from repro.core import mesh_2d
+from repro.fleet import Fleet, FleetConfig, PodSpec, Scenario, fleet_trace
+from repro.obs.registry import (MetricsRegistry, collect_cluster,
+                                collect_fleet)
+from repro.obs.timeline import TimelineSampler
+from repro.obs.trace import FLEET_PID, Tracer
+from repro.sched import (ClusterScheduler, RecoveryConfig, ServingConfig,
+                         make_policy, make_trace)
+from repro.serve.stats import LatencyStats
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "trace_report", ROOT / "tools" / "trace_report.py")
+trace_report = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(trace_report)
+
+
+# ---------------------------------------------------------------------------
+# Tracer mechanics
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_export_is_schema_valid(self):
+        tr = Tracer(pid=3)
+        tr.process_name("pod3 8x8 vnpu")
+        tr.thread_name(7, "tenant 7")
+        tr.span("queued", "tenant", 1.0, 0.5, tid=7)
+        tr.instant("admitted", "tenant", 1.5, tid=7, args={"n_cores": 4})
+        tr.counter("cores", 2.0, {"busy": 12, "free": 52})
+        doc = tr.export()
+        assert trace_report.validate(doc) == []
+        assert doc["otherData"] == {"clock": "sim", "emitted": 3,
+                                    "dropped": 0}
+        # metadata first, sim-seconds exported as microseconds
+        assert [e["ph"] for e in doc["traceEvents"]] == \
+            ["M", "M", "X", "i", "C"]
+        span = doc["traceEvents"][2]
+        assert span["ts"] == 1e6 and span["dur"] == 0.5e6
+        assert span["pid"] == 3 and span["tid"] == 7
+
+    def test_null_tracer_is_inert(self):
+        n0 = Tracer.NULL.n_emitted
+        Tracer.NULL.span("x", "c", 0.0, 1.0)
+        Tracer.NULL.instant("y", "c", 0.0)
+        Tracer.NULL.counter("z", 0.0, {"v": 1})
+        Tracer.NULL.process_name("nope")
+        assert not Tracer.NULL.enabled
+        assert len(Tracer.NULL) == 0
+        assert Tracer.NULL.n_emitted == n0
+        assert Tracer.NULL.export()["traceEvents"] == []
+
+    def test_ring_overflow_evicts_oldest_by_count(self):
+        tr = Tracer(capacity=10)
+        for i in range(100):
+            tr.span(f"s{i}", "t", float(i), 0.5)
+        assert len(tr) == 10
+        assert tr.dropped == 90
+        names = [e["name"] for e in tr.export()["traceEvents"]]
+        assert names == [f"s{i}" for i in range(90, 100)]
+        assert tr.export()["otherData"]["dropped"] == 90
+
+    def test_overflow_is_deterministic(self):
+        def run():
+            tr = Tracer(capacity=7)
+            tr.process_name("p")
+            for i in range(50):
+                tr.span(f"s{i}", "t", float(i), 0.25, tid=i % 3)
+            return tr.export()
+        assert run() == run()
+
+    def test_drain_absorb_round_trip(self):
+        pod = Tracer(capacity=5, pid=2)
+        pod.process_name("pod2")
+        pod.thread_name(9, "tenant 9")
+        for i in range(8):                  # overflows: 3 dropped
+            pod.span(f"s{i}", "t", float(i), 0.1, tid=9)
+        payload = pod.drain()
+        assert len(payload["events"]) == 5
+        assert payload["dropped"] == 3
+        assert payload["meta"] == {"2": "pod2", "2|9": "tenant 9"}
+        assert len(pod) == 0
+        # counters restart per window: a clean drain reports 0 dropped
+        pod.span("s8", "t", 8.0, 0.1, tid=9)
+        assert pod.drain()["dropped"] == 0
+
+        merged = Tracer(pid=FLEET_PID)
+        merged.absorb(payload)
+        doc = merged.export()
+        assert trace_report.validate(doc) == []
+        assert {e["pid"] for e in doc["traceEvents"]} == {2}
+        assert doc["traceEvents"][0] == {
+            "name": "process_name", "ph": "M", "pid": 2, "tid": 0,
+            "args": {"name": "pod2"}}
+
+    def test_timeline_sampler_counter_tracks(self):
+        tr = Tracer()
+        tl = TimelineSampler(tr)
+        tl.sample(1.0, n_total=36, n_free=20, n_failed=2,
+                  link_loads={(0, 1): 3.0, (1, 0): 1.0})
+        doc = tr.export()
+        assert trace_report.validate(doc) == []
+        by_name = {e["name"]: e["args"] for e in doc["traceEvents"]}
+        assert by_name["cores"] == {"busy": 14, "free": 20, "failed": 2}
+        assert by_name["link_heat"]["total"] == 4.0
+        assert by_name["link_heat"]["max"] == 3.0
+        assert by_name["link_heat"]["active_links"] == 2
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry
+# ---------------------------------------------------------------------------
+
+_check_bench_spec = importlib.util.spec_from_file_location(
+    "check_bench", ROOT / "tools" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_check_bench_spec)
+_check_bench_spec.loader.exec_module(check_bench)
+
+
+class TestRegistry:
+    def test_counter_gauge_histogram_snapshot(self):
+        reg = MetricsRegistry()
+        reg.counter("cluster_admitted_total", 41, help="admissions")
+        reg.gauge("cluster_utilization_frac", 0.62)
+        reg.histogram("cluster_ttft_seconds",
+                      {"count": 3, "total": 1.5, "mean": 0.5, "min": 0.1,
+                       "max": 0.9, "quantiles": {"0.5": 0.5}})
+        snap = reg.snapshot()
+        assert [m["name"] for m in snap] == [
+            "cluster_admitted_total", "cluster_utilization_frac",
+            "cluster_ttft_seconds"]
+        assert snap[0]["kind"] == "counter" and snap[0]["value"] == 41
+        assert snap[2]["kind"] == "histogram" and snap[2]["count"] == 3
+        # the snapshot must pass the same lint check_bench applies to
+        # snapshots embedded in BENCH entries
+        out = []
+        check_bench._check_metrics("m", snap, out)
+        assert out == []
+
+    def test_duplicate_and_illegal_names_raise(self):
+        reg = MetricsRegistry()
+        reg.counter("ok_total", 1)
+        with pytest.raises(ValueError):
+            reg.counter("ok_total", 2)
+        with pytest.raises(ValueError):
+            reg.gauge("bad-name", 1.0)
+        with pytest.raises(ValueError):
+            reg.counter("9starts_with_digit", 1)
+
+    def test_prometheus_text_exposition(self):
+        reg = MetricsRegistry()
+        reg.counter("x_total", 2, help="a counter")
+        reg.gauge("y_s", 0.25)
+        reg.histogram("z_seconds",
+                      {"count": 2, "total": 3.0, "mean": 1.5, "min": 1.0,
+                       "max": 2.0, "quantiles": {"0.5": 1.5}})
+        text = reg.prometheus_text()
+        assert "# TYPE x_total counter" in text
+        assert "x_total 2" in text
+        assert "# TYPE z_seconds summary" in text
+        assert 'z_seconds{quantile="0.5"} 1.5' in text
+        assert "z_seconds_count 2" in text
+
+    def test_collect_cluster_surfaces_every_counter(self):
+        """Every ``n_*`` counter on ClusterMetrics lands in the registry —
+        the guard against the summary()-drops-a-counter bug class."""
+        import dataclasses
+        pol = make_policy("vnpu", mesh_2d(6, 6))
+        sched = ClusterScheduler(pol, epoch_s=2.0)
+        m = sched.run(make_trace("mixed", seed=3, horizon_s=15.0),
+                      trace_name="mixed")
+        reg = MetricsRegistry()
+        collect_cluster(reg, m, prefix="c")
+        names = {s["name"] for s in reg.snapshot()}
+        for f in dataclasses.fields(m):
+            if f.name.startswith("n_"):
+                assert f"c_{f.name[2:]}_total" in names, f.name
+
+
+# ---------------------------------------------------------------------------
+# tracer purity: traced == untraced, bit for bit
+# ---------------------------------------------------------------------------
+
+def _cluster_digest(m):
+    return ([(s.t, s.agg_fps, s.utilization, s.n_resident, s.n_queued)
+             for s in m.samples], dict(m.tenant_iterations),
+            (m.n_arrived, m.n_admitted, m.n_rejected, m.n_events),
+            m.recovery_summary())
+
+
+class TestTracerPurity:
+    def _mixed_run(self, tracer):
+        pol = make_policy("vnpu", mesh_2d(6, 6))
+        sched = ClusterScheduler(pol, epoch_s=2.0, tracer=tracer)
+        return sched.run(make_trace("mixed", seed=5, horizon_s=20.0),
+                         trace_name="mixed")
+
+    def test_cluster_6x6_mixed(self):
+        base = self._mixed_run(None)
+        tr = Tracer()
+        traced = self._mixed_run(tr)
+        assert _cluster_digest(base) == _cluster_digest(traced)
+        assert len(tr) > 0
+        assert trace_report.validate(tr.export()) == []
+
+    @pytest.mark.parametrize("engine", ["scalar", "vector"])
+    def test_serving_8x8(self, engine):
+        def run(tracer):
+            pol = make_policy("vnpu", mesh_2d(8, 8), mapper="bipartite")
+            sched = ClusterScheduler(
+                pol, serving=ServingConfig(engine=engine),
+                admission="sla", tracer=tracer)
+            return sched.run(make_trace("serving", horizon_s=30.0),
+                             trace_name="serving")
+        base = run(None)
+        tr = Tracer()
+        traced = run(tr)
+        assert base.request_log == traced.request_log
+        assert base.serving_summary() == traced.serving_summary()
+        assert _cluster_digest(base) == _cluster_digest(traced)
+        names = {e["name"] for e in tr.export()["traceEvents"]}
+        assert {"prefill", "decode", "queued"} <= names
+        assert trace_report.validate(tr.export()) == []
+
+    def test_chaos_6x6_storm(self):
+        plan = make_fault_plan(6, 6, 40.0, seed=7)
+        trace = make_trace("mixed", seed=7, horizon_s=40.0)
+
+        def run(tracer):
+            pol = make_policy("vnpu", mesh_2d(6, 6))
+            sched = ClusterScheduler(pol, epoch_s=2.0,
+                                     recovery=RecoveryConfig(),
+                                     tracer=tracer)
+            sched.begin()
+            sched.feed(trace)
+            sched.inject_chaos(plan.cluster_events())
+            sched.advance_to(None)
+            return sched.finish()
+        base = run(None)
+        tr = Tracer()
+        traced = run(tr)
+        assert _cluster_digest(base) == _cluster_digest(traced)
+        cats = {e.get("cat") for e in tr.export()["traceEvents"]}
+        assert "chaos" in cats
+        assert trace_report.validate(tr.export()) == []
+
+    def _fleet_run(self, workers, trace_capacity):
+        pods = [PodSpec(pod_id=0, rows=8, cols=8),
+                PodSpec(pod_id=1, rows=8, cols=8,
+                        mem_interface_cols=(0, 7))]
+        cfg = FleetConfig(seed=11, window_s=2.0, record_requests=True,
+                          trace_capacity=trace_capacity)
+        fleet = Fleet(pods, cfg)
+        trace = fleet_trace(2, seed=11, horizon_s=8.0)
+        scenarios = [Scenario("upgrade", t_s=4.0, pod_id=1, duration_s=4.0)]
+        m = fleet.run(trace, scenarios=scenarios, workers=workers,
+                      end_s=24.0)
+        return m, fleet
+
+    def test_hetero_fleet_traced_matches_untraced(self):
+        base, _ = self._fleet_run(1, 0)
+        traced, fleet = self._fleet_run(1, 100_000)
+        assert base.pod_digests() == traced.pod_digests()
+        assert base.serving_summary() == traced.serving_summary()
+        doc = fleet.tracer.export()
+        assert trace_report.validate(doc) == []
+        pids = {e["pid"] for e in doc["traceEvents"]}
+        assert {0, 1, FLEET_PID} <= pids
+
+    def test_fleet_serial_and_parallel_traces_identical(self):
+        s_m, s_fleet = self._fleet_run(1, 100_000)
+        p_m, p_fleet = self._fleet_run(2, 100_000)
+        assert s_m.pod_digests() == p_m.pod_digests()
+        exp_s, exp_p = s_fleet.tracer.export(), p_fleet.tracer.export()
+        assert exp_s["traceEvents"] == exp_p["traceEvents"]
+
+        reg_s, reg_p = MetricsRegistry(), MetricsRegistry()
+        collect_fleet(reg_s, s_m)
+        collect_fleet(reg_p, p_m)
+        assert reg_s.snapshot() == reg_p.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# LatencyStats snapshot / merge round trips
+# ---------------------------------------------------------------------------
+
+def _stats_from(xs):
+    s = LatencyStats()
+    for x in xs:
+        s.add(x)
+    return s
+
+
+_samples = st.lists(st.floats(min_value=1e-4, max_value=100.0,
+                              allow_nan=False, allow_infinity=False),
+                    min_size=0, max_size=200)
+
+
+class TestLatencyStatsSnapshot:
+    @pytest.mark.parametrize("n", [0, 1, 50, 200])
+    def test_round_trip_fixed_series(self, n):
+        xs = [((i * 29) % 97) / 13.0 + 0.01 for i in range(n)]
+        a = _stats_from(xs)
+        b = LatencyStats.from_snapshot(a.snapshot())
+        assert (b.count, b.total, b.mean) == (a.count, a.total, a.mean)
+        if n:
+            for q in (50.0, 95.0, 99.0):
+                assert b.percentile(q) == a.percentile(q)
+        assert b.snapshot() == a.snapshot()
+        # a restored instance keeps streaming identically
+        a.add(42.0)
+        b.add(42.0)
+        assert b.snapshot() == a.snapshot()
+
+    @given(_samples)
+    @settings(max_examples=60, deadline=None)
+    def test_snapshot_round_trip_answers_identically(self, xs):
+        a = _stats_from(xs)
+        b = LatencyStats.from_snapshot(a.snapshot())
+        assert b.count == a.count
+        assert b.total == a.total
+        assert b.mean == a.mean
+        if a.count:
+            for q in (50.0, 95.0, 99.0):
+                assert b.percentile(q) == a.percentile(q)
+        assert b.snapshot() == a.snapshot()
+
+    def test_merged_mode_round_trip(self):
+        parts = [_stats_from([float(i) for i in range(100)]),
+                 _stats_from([5.0, 7.0, 9.0])]
+        m = LatencyStats.merge(parts)
+        m2 = LatencyStats.from_snapshot(m.snapshot())
+        assert m2.count == m.count
+        for q in (10.0, 50.0, 95.0):
+            assert m2.percentile(q) == m.percentile(q)
+        with pytest.raises(RuntimeError):
+            m2.add(1.0)
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError):
+            LatencyStats.from_snapshot({"mode": "wat", "count": 1,
+                                        "total": 1.0, "min": 1.0,
+                                        "max": 1.0})
+
+    @staticmethod
+    def _assert_order_independent(parts):
+        """snapshot -> from_snapshot -> merge must not depend on part
+        order: exact while every part is raw and the total stays under
+        CUTOVER; to float tolerance once any part sketched (the
+        mixture-CDF inversion sums per-part contributions in input
+        order).  All-raw totals beyond CUTOVER replay into a P² sketch,
+        which is an order-sensitive stream by design — only the exact
+        counters are order-free there."""
+        rebuilt = [LatencyStats.from_snapshot(p.snapshot()) for p in parts]
+        a = LatencyStats.merge(parts)
+        b = LatencyStats.merge(list(reversed(rebuilt)))
+        assert b.count == a.count
+        assert math.isclose(b.total, a.total, rel_tol=1e-12, abs_tol=1e-12)
+        if a.count == 0:
+            return
+        assert b.vmin == a.vmin and b.vmax == a.vmax
+        all_raw = all(p._sketches is None and p._cdf is None
+                      for p in parts)
+        if all_raw and a.count > LatencyStats.CUTOVER:
+            return
+        for q in (50.0, 95.0, 99.0):
+            pa, pb = a.percentile(q), b.percentile(q)
+            if all_raw:
+                assert pa == pb
+            else:
+                assert math.isclose(pa, pb, rel_tol=1e-6, abs_tol=1e-6)
+
+    def test_merge_order_independent_exact_parts(self):
+        self._assert_order_independent(
+            [_stats_from([1.0, 5.0, 2.0]), _stats_from([9.0]),
+             _stats_from([0.5, 0.25])])
+
+    def test_merge_order_independent_sketched_parts(self):
+        big = _stats_from([((i * 37) % 101) / 7.0 for i in range(300)])
+        small = _stats_from([3.0, 1.0, 4.0])
+        assert big._sketches is not None    # really sketched
+        self._assert_order_independent([big, small])
+        self._assert_order_independent(
+            [big, _stats_from([((i * 17) % 89) / 5.0
+                               for i in range(200)])])
+
+    @given(st.lists(_samples, min_size=2, max_size=4))
+    @settings(max_examples=40, deadline=None)
+    def test_merge_is_order_independent(self, parts_xs):
+        self._assert_order_independent([_stats_from(xs)
+                                        for xs in parts_xs])
+
+
+# ---------------------------------------------------------------------------
+# embedded metrics snapshots in BENCH records (check_bench lint)
+# ---------------------------------------------------------------------------
+
+class TestBenchMetricsLint:
+    def _record_with(self, metrics):
+        return {"benchmark": "cluster_sim", "gates": {},
+                "entries": [{"mesh": "6x6", "trace": "mixed",
+                             "mode": "ledger", "metrics": metrics}]}
+
+    def test_valid_snapshot_is_clean(self):
+        reg = MetricsRegistry()
+        reg.counter("a_total", 1)
+        reg.gauge("b_s", 2.0)
+        rec = self._record_with(reg.snapshot())
+        assert check_bench.check_record(rec) == []
+
+    def test_violations_flagged(self):
+        bad = [{"name": "bad name", "kind": "counter", "value": 1},
+               {"name": "dup_total", "kind": "counter", "value": 1},
+               {"name": "dup_total", "kind": "counter", "value": 2},
+               {"name": "nan_g", "kind": "gauge", "value": float("nan")},
+               {"name": "wat", "kind": "timer", "value": 1},
+               {"name": "h", "kind": "histogram", "count": 1, "sum": 1.0,
+                "min": 1.0, "max": 1.0, "quantiles": []}]
+        out = check_bench.check_record(self._record_with(bad))
+        assert any("does not match" in v for v in out)
+        assert any("duplicates metric name" in v for v in out)
+        assert any("not a finite number" in v for v in out)
+        assert any("timer" in v for v in out)
+        assert any("quantiles" in v for v in out)

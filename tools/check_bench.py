@@ -15,7 +15,10 @@ poisons every downstream claim.  This lint validates the record:
   ``6x6-gap``) and a non-empty ``mode``;
 * every numeric field in every entry and gate is finite (no NaN/inf);
 * no duplicate ``(mesh, trace, mode)`` rows — ``_write_bench`` keys its
-  replacement on those, so duplicates mean the merge logic regressed.
+  replacement on those, so duplicates mean the merge logic regressed;
+* embedded metrics-registry snapshots (an entry's ``metrics`` list, from
+  ``repro.obs.registry``) are lists of well-formed metric objects:
+  Prometheus-legal unique names, known kinds, finite values.
 
 Run:  python tools/check_bench.py
 (the CI gap-gate job; ``tests/test_bench_record.py`` runs the same checks
@@ -42,6 +45,55 @@ KNOWN_TRACES = frozenset({
     "bursty", "fleet-serving", "large", "mixed", "pod-mixed",
     "pod-serving", "serving", "small", "gap-corpus", "chaos-mixed",
 })
+
+
+#: legal metric names (Prometheus exposition charset)
+METRIC_NAME_RE = r"^[a-zA-Z_:][a-zA-Z0-9_:]*$"
+METRIC_KINDS = frozenset({"counter", "gauge", "histogram"})
+
+
+def _check_metrics(prefix: str, metrics: Any, out: List[str]) -> None:
+    """Lint one embedded metrics-registry snapshot (``snapshot()`` shape:
+    a list of {name, kind, value|count/sum/quantiles} objects)."""
+    import re
+    if not isinstance(metrics, list):
+        out.append(f"{prefix}: metrics is {type(metrics).__name__}, "
+                   "expected list")
+        return
+    name_re = re.compile(METRIC_NAME_RE)
+    seen: Dict[str, int] = {}
+    for i, m in enumerate(metrics):
+        where = f"{prefix}[{i}]"
+        if not isinstance(m, dict):
+            out.append(f"{where}: not a dict")
+            continue
+        name, kind = m.get("name"), m.get("kind")
+        if not (isinstance(name, str) and name_re.match(name)):
+            out.append(f"{where}.name {name!r} does not match "
+                       f"{METRIC_NAME_RE}")
+        elif name in seen:
+            out.append(f"{where} duplicates metric name {name!r} "
+                       f"({prefix}[{seen[name]}])")
+        else:
+            seen[name] = i
+        if kind not in METRIC_KINDS:
+            out.append(f"{where}.kind {kind!r} not in "
+                       f"{sorted(METRIC_KINDS)}")
+            continue
+        if kind in ("counter", "gauge"):
+            v = m.get("value")
+            if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                    or not math.isfinite(v):
+                out.append(f"{where}.value {v!r} is not a finite number")
+        else:   # histogram
+            for field in ("count", "sum", "min", "max"):
+                v = m.get(field)
+                if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                        or not math.isfinite(v):
+                    out.append(f"{where}.{field} {v!r} is not a "
+                               "finite number")
+            if not isinstance(m.get("quantiles"), dict):
+                out.append(f"{where}.quantiles is not a dict")
 
 
 def _finite_violations(prefix: str, obj: Any, out: List[str]) -> None:
@@ -103,6 +155,9 @@ def check_record(record: Dict[str, Any]) -> List[str]:
                 f"(mesh={mesh!r}, trace={trace!r}, mode={mode!r})")
         else:
             seen[key] = i
+        if "metrics" in e:
+            _check_metrics(f"entries[{i}].metrics", e["metrics"],
+                           violations)
         _finite_violations(f"entries[{i}]", e, violations)
     return violations
 

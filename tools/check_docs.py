@@ -1,7 +1,8 @@
 """Docs lint: documented commands must not rot.
 
-Extracts fenced ``bash`` code blocks from README.md, docs/architecture.md
-and DESIGN.md, finds every ``python ...`` invocation, and checks that
+Extracts fenced ``bash`` code blocks from README.md, docs/architecture.md,
+DESIGN.md and docs/observability.md, finds every ``python ...`` invocation,
+and checks that
 
 * the referenced script / module file exists in the repo;
 * for argparse-based benchmark scripts, every ``--flag`` used in the
@@ -25,13 +26,14 @@ from typing import Dict, List
 
 ROOT = Path(__file__).resolve().parent.parent
 
-DOC_FILES = ("README.md", "docs/architecture.md", "DESIGN.md")
+DOC_FILES = ("README.md", "docs/architecture.md", "DESIGN.md",
+             "docs/observability.md")
 
 # scripts whose documented flags are validated against their --help output
 # (examples/ scripts take no arguments and are only checked for existence)
 ARGPARSE_SCRIPTS = ("benchmarks/cluster_sim.py", "benchmarks/mapping_engine.py",
                     "benchmarks/serving_sim.py", "benchmarks/fleet_sim.py",
-                    "benchmarks/chaos_sim.py")
+                    "benchmarks/chaos_sim.py", "tools/trace_report.py")
 
 # non-repo executables we do not try to resolve
 SKIP_MODULES = ("pytest", "pip", "doctest", "venv")

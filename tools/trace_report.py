@@ -1,0 +1,244 @@
+"""Trace report: summarize + schema-validate Chrome trace-event JSON.
+
+The benchmark CLIs' ``--trace-out`` writes sim-time span traces in the
+Chrome trace-event format (viewable at https://ui.perfetto.dev).  This
+tool works on those files without a browser:
+
+    python tools/trace_report.py trace.json              # summary
+    python tools/trace_report.py trace.json --validate   # CI schema gate
+    python tools/trace_report.py trace.json --json       # machine output
+
+The summary reports the top span classes by total sim-time, the
+busiest tenants (queued vs executing breakdown — the per-tenant critical
+path), instant-event counts and the counter tracks present.
+
+``--validate`` checks every event against the trace-event schema the
+:mod:`repro.obs.trace` Tracer emits — required keys per phase, finite
+microsecond timestamps, non-negative durations, counter samples with
+numeric values — and exits non-zero listing every violation, so the CI
+obs-gate catches a malformed emitter before a human ever loads the file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List
+
+#: event phases the Tracer emits (complete span, instant, counter, meta)
+KNOWN_PHASES = frozenset({"X", "i", "C", "M"})
+INSTANT_SCOPES = frozenset({"t", "p", "g"})
+META_NAMES = frozenset({"process_name", "thread_name"})
+
+
+def _finite(v: Any) -> bool:
+    return (isinstance(v, (int, float)) and not isinstance(v, bool)
+            and math.isfinite(v))
+
+
+def validate(doc: Any) -> List[str]:
+    """Schema violations in a loaded trace document (empty list = valid)."""
+    out: List[str] = []
+    if isinstance(doc, dict):
+        events = doc.get("traceEvents")
+        if not isinstance(events, list):
+            return ["traceEvents missing or not a list"]
+    elif isinstance(doc, list):    # the bare-array spelling is also legal
+        events = doc
+    else:
+        return [f"top level is {type(doc).__name__}, expected dict or list"]
+
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            out.append(f"{where}: not a dict")
+            continue
+        ph = ev.get("ph")
+        if ph not in KNOWN_PHASES:
+            out.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if not (isinstance(ev.get("name"), str) and ev["name"]):
+            out.append(f"{where}: missing/empty name")
+        if not isinstance(ev.get("pid"), int):
+            out.append(f"{where}: pid {ev.get('pid')!r} is not an int")
+        if not isinstance(ev.get("tid"), int):
+            out.append(f"{where}: tid {ev.get('tid')!r} is not an int")
+        if ph == "M":
+            if ev.get("name") not in META_NAMES:
+                out.append(f"{where}: metadata name {ev.get('name')!r} "
+                           f"not in {sorted(META_NAMES)}")
+            args = ev.get("args")
+            if not (isinstance(args, dict)
+                    and isinstance(args.get("name"), str)):
+                out.append(f"{where}: metadata args.name missing")
+            continue
+        if not _finite(ev.get("ts")):
+            out.append(f"{where}: ts {ev.get('ts')!r} is not finite")
+        if ph == "X":
+            if not _finite(ev.get("dur")) or ev.get("dur", -1) < 0:
+                out.append(f"{where}: dur {ev.get('dur')!r} is not a "
+                           "non-negative number")
+        elif ph == "i":
+            if ev.get("s", "t") not in INSTANT_SCOPES:
+                out.append(f"{where}: instant scope {ev.get('s')!r} "
+                           f"not in {sorted(INSTANT_SCOPES)}")
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                out.append(f"{where}: counter args missing")
+            else:
+                for k, v in args.items():
+                    if not _finite(v):
+                        out.append(f"{where}: counter series {k!r} value "
+                                   f"{v!r} is not finite")
+    return out
+
+
+def summarize(doc: Any, top: int = 12) -> Dict[str, Any]:
+    """Aggregate view of one trace (see the module docstring)."""
+    events = doc.get("traceEvents", []) if isinstance(doc, dict) else doc
+    span_classes: Dict[tuple, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "total_us": 0.0, "max_us": 0.0})
+    tenants: Dict[tuple, Dict[str, float]] = defaultdict(
+        lambda: {"queued_us": 0.0, "exec_us": 0.0, "spans": 0})
+    instants: Dict[str, int] = defaultdict(int)
+    counters: Dict[str, int] = defaultdict(int)
+    names: Dict[int, str] = {}
+    t_min, t_max = math.inf, -math.inf
+    n_spans = 0
+    for ev in events:
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") == "process_name":
+                names[ev["pid"]] = ev["args"]["name"]
+            continue
+        ts = ev.get("ts", 0.0)
+        t_min = min(t_min, ts)
+        t_max = max(t_max, ts + ev.get("dur", 0.0))
+        if ph == "X":
+            n_spans += 1
+            dur = ev.get("dur", 0.0)
+            c = span_classes[(ev.get("cat", ""), ev.get("name", ""))]
+            c["count"] += 1
+            c["total_us"] += dur
+            c["max_us"] = max(c["max_us"], dur)
+            tid = ev.get("tid", 0)
+            if tid:
+                t = tenants[(ev.get("pid", 0), tid)]
+                t["spans"] += 1
+                key = "queued_us" if ev.get("name") == "queued" \
+                    else "exec_us"
+                t[key] += dur
+        elif ph == "i":
+            instants[ev.get("name", "")] += 1
+        elif ph == "C":
+            counters[ev.get("name", "")] += 1
+
+    classes = sorted(span_classes.items(),
+                     key=lambda kv: -kv[1]["total_us"])[:top]
+    busiest = sorted(tenants.items(),
+                     key=lambda kv: -(kv[1]["queued_us"]
+                                      + kv[1]["exec_us"]))[:top]
+    return {
+        "events": len(events),
+        "spans": n_spans,
+        "sim_range_s": [round(t_min / 1e6, 6), round(t_max / 1e6, 6)]
+        if n_spans or instants or counters else [0.0, 0.0],
+        "processes": {str(pid): name for pid, name in sorted(names.items())},
+        "span_classes": [
+            {"cat": cat, "name": name, "count": int(c["count"]),
+             "total_s": round(c["total_us"] / 1e6, 6),
+             "max_s": round(c["max_us"] / 1e6, 6)}
+            for (cat, name), c in classes],
+        "busiest_tenants": [
+            {"pid": pid, "tid": tid, "spans": int(t["spans"]),
+             "queued_s": round(t["queued_us"] / 1e6, 6),
+             "exec_s": round(t["exec_us"] / 1e6, 6)}
+            for (pid, tid), t in busiest],
+        "instants": dict(sorted(instants.items(),
+                                key=lambda kv: -kv[1])),
+        "counter_tracks": dict(sorted(counters.items())),
+    }
+
+
+def _print_summary(s: Dict[str, Any]) -> None:
+    lo, hi = s["sim_range_s"]
+    print(f"{s['events']} events ({s['spans']} spans) over sim "
+          f"[{lo:.1f}s, {hi:.1f}s]")
+    if s["processes"]:
+        procs = ", ".join(f"{pid}={name}"
+                          for pid, name in s["processes"].items())
+        print(f"processes: {procs}")
+    if s["span_classes"]:
+        print(f"\ntop span classes by total sim-time:")
+        print(f"{'cat':>9} {'name':>12} {'count':>8} {'total_s':>10} "
+              f"{'max_s':>9}")
+        for c in s["span_classes"]:
+            print(f"{c['cat']:>9} {c['name']:>12} {c['count']:>8} "
+                  f"{c['total_s']:>10.3f} {c['max_s']:>9.3f}")
+    if s["busiest_tenants"]:
+        print(f"\nbusiest tenants (critical path = queued + exec):")
+        print(f"{'pid':>5} {'tid':>6} {'spans':>6} {'queued_s':>9} "
+              f"{'exec_s':>9}")
+        for t in s["busiest_tenants"]:
+            print(f"{t['pid']:>5} {t['tid']:>6} {t['spans']:>6} "
+                  f"{t['queued_s']:>9.3f} {t['exec_s']:>9.3f}")
+    if s["instants"]:
+        print(f"\ninstants: " + ", ".join(
+            f"{k}={v}" for k, v in s["instants"].items()))
+    if s["counter_tracks"]:
+        print(f"counter tracks: " + ", ".join(
+            f"{k}({v} samples)" for k, v in s["counter_tracks"].items()))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file "
+                                  "(a CLI's --trace-out output)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check every event; non-zero exit on any "
+                         "violation (the CI obs-gate)")
+    ap.add_argument("--top", type=int, default=12,
+                    help="rows per summary table")
+    ap.add_argument("--json", action="store_true", help="machine output")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.trace) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"trace_report: cannot load {args.trace}: {exc}",
+              file=sys.stderr)
+        return 1
+
+    violations = validate(doc)
+    if args.validate:
+        if violations:
+            print(f"trace_report: {len(violations)} schema violation(s) "
+                  f"in {args.trace}")
+            for v in violations[:50]:
+                print(f"  - {v}")
+            if len(violations) > 50:
+                print(f"  ... and {len(violations) - 50} more")
+            return 1
+        n = len(doc.get("traceEvents", doc) if isinstance(doc, dict)
+                else doc)
+        print(f"trace_report: OK ({n} events, schema-valid)")
+
+    summary = summarize(doc, top=args.top)
+    if violations and not args.validate:
+        summary["schema_violations"] = len(violations)
+    if args.json:
+        print(json.dumps(summary, indent=2))
+    else:
+        _print_summary(summary)
+        if violations and not args.validate:
+            print(f"\nWARNING: {len(violations)} schema violation(s) — "
+                  f"run with --validate for details")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
